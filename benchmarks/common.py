@@ -1,0 +1,53 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark module exposes ``run(quick: bool) -> list[Row]``; run.py
+prints them as ``name,us_per_call,derived`` CSV (us_per_call = wall
+microseconds per simulated dataplane tick or per engine step — the
+"how fast does the harness itself run" number; `derived` = the paper
+metric being reproduced).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: dict[str, Any]
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={_fmt(v)}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.3f},{d}"
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0
+
+
+def us_per_tick(wall_s: float, n_ticks: int) -> float:
+    return wall_s / max(n_ticks, 1) * 1e6

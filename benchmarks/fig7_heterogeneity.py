@@ -1,0 +1,90 @@
+"""Fig. 7 — learned characteristics: heterogeneity, scalability, decisions.
+
+(a) Non-linear throughput-vs-message-size curves for three accelerator
+    families (logarithmic: SHA; exponential: AES; uniquely ad-hoc:
+    compression) and their egress/ingress ratios R.
+(b) Scalability 1 -> 16 flows: near-full aggregate throughput (the paper's
+    per-flow overhead is 0.97% ALMs / 0.05 cores; here we show the
+    dataplane itself is not the bottleneck as flows scale).
+(c) Control-plane classification: VM1 with 16 x 1KB flows + VM2 with
+    4 x 4KB flows on one accelerator -> profiled split ~50/50 -> the
+    combination is tagged SLO-Friendly for half-capacity SLOs, and
+    SLO-Violating when the requested SLOs exceed profiled capacity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import baselines, token_bucket as tb
+from repro.core.accelerator import CATALOG, AccelTable, size_grid
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.profiler import ProfileTable
+from repro.core.sim import SimConfig, gen_arrivals, simulate
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows, payload = [], {}
+
+    # (a) heterogeneity curves -----------------------------------------
+    grid = [64, 256, 1024, 4096, 16384, 65536]
+    curves = {}
+    for name in ("sha3_512", "aes256", "compress"):
+        acc = CATALOG[name]
+        tput = acc.throughput_gbps(np.asarray(grid, float))
+        curves[name] = {str(m): float(t) for m, t in zip(grid, tput)}
+        egress = acc.egress_bytes(np.asarray(grid, float))
+        r = egress / np.asarray(grid, float)
+        rows.append(Row(f"fig7a/{name}", 0.0,
+                        dict(curve=acc.curve,
+                             frac_at_64B=float(tput[0] / acc.peak_gbps),
+                             frac_at_64KB=float(tput[-1] / acc.peak_gbps),
+                             R_at_4KB=float(r[3]))))
+    payload["curves"] = curves
+
+    # (b) scalability 1..16 flows ---------------------------------------
+    n_ticks = 20_000 if quick else 60_000
+    agg = {}
+    with Timer() as t:
+        for n in (1, 2, 4, 8, 16):
+            specs = [
+                FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                         TrafficPattern(4096, load=1.0 / n,
+                                        process="poisson"),
+                         SLO.gbps(50.0 / n))
+                for i in range(n)
+            ]
+            flows = FlowSet.build(specs)
+            cfg = SimConfig(n_ticks=n_ticks, k_grant=8, k_srv=4, k_eg=8)
+            arr = gen_arrivals(flows, cfg,
+                               load_ref_gbps={i: 55.0 for i in range(n)})
+            plans = [tb.params_for_gbps(52.0 / n) for _ in range(n)]
+            res = simulate(flows, AccelTable.build([CATALOG["synthetic50"]]),
+                           LinkSpec(), cfg, tb.pack(plans), *arr)
+            agg[n] = sum(res.mean_ingress_gbps(i, flows) for i in range(n))
+    rows.append(Row("fig7b/scalability", us_per_tick(t.s, 5 * n_ticks),
+                    {f"flows{n}_gbps": v for n, v in agg.items()}
+                    | {"frac_16_vs_1": agg[16] / max(agg[1], 1e-9)}))
+    payload["scalability"] = agg
+
+    # (c) control-plane classification -----------------------------------
+    pt = ProfileTable(n_ticks=20_000 if quick else 40_000)
+    ctx = [(Path.INLINE_NIC_RX, 1024, 0.9)] * 16 + \
+          [(Path.INLINE_NIC_RX, 4096, 0.9)] * 4
+    with Timer() as t:
+        entry = pt.profile_context(CATALOG["synthetic50"], ctx)
+    vm1 = sum(entry.per_flow_gbps[:16])
+    vm2 = sum(entry.per_flow_gbps[16:])
+    half = entry.capacity_gbps / 2
+    # "half each" must leave the admission margin (2%) — request 0.97x
+    friendly = entry.slo_tag([0.97 * half, 0.97 * half])
+    violating = not entry.slo_tag([half * 1.4, half * 1.4])
+    rows.append(Row("fig7c/classification", us_per_tick(t.s, pt.n_ticks),
+                    dict(vm1_gbps=vm1, vm2_gbps=vm2,
+                         fair_ratio=vm1 / max(vm2, 1e-9),
+                         tag_half_friendly=friendly,
+                         tag_overbooked_violating=violating)))
+    payload["classification"] = rows[-1].derived
+    save_json("fig7_heterogeneity", payload)
+    return rows

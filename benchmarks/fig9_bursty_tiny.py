@@ -1,0 +1,91 @@
+"""Fig. 9 — use case 2: bursty tiny messages vs MTU streams.
+
+VM1: latency-critical 64B flow, SLO = 99th% latency within ~1 us.
+VM2: 1500B stream, SLO = 32 Gbps throughput, bursty (on/off).
+Both on the inline-NIC-RX path, sharing one accelerator.
+
+Arcus shapes VM2's injection so it cannot overload the shared accelerator
+queue; the Bypassed(PANIC) baseline prioritizes VM1 at the arbiter but has
+no shaping, so VM2's bursts (>32 Gbps momentarily) still pile into the
+shared queue ahead of VM1's packets.  Paper claims: VM1 avg ~0.5 us /
+99th% <= 0.74 us under Arcus, >= 1.9x better 99th% than the baseline, and
+VM2 throughput pinned at 32 Gbps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import baselines, token_bucket as tb
+from repro.core.accelerator import AcceleratorSpec, AccelTable, CURVE_LINEAR
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.sim import SimConfig, gen_arrivals, simulate
+
+# fast wire-speed accelerator: tiny fixed pipeline latency
+ACCEL = AcceleratorSpec("nic_acc", peak_gbps=60.0, curve=CURVE_LINEAR,
+                        overhead_ns=120.0, parallelism=2)
+
+
+def _run(sys_name: str, n_ticks: int):
+    sys_cfg = baselines.ALL[sys_name]
+    specs = [
+        FlowSpec(0, 0, Path.INLINE_NIC_RX, 0,
+                 TrafficPattern(64, rate_mps=2.0e6, process="poisson"),
+                 SLO.latency(1e-6), priority=2),
+        FlowSpec(1, 1, Path.INLINE_NIC_RX, 0,
+                 TrafficPattern(1500, load=0.75, process="onoff",
+                                burst_len=64, duty=0.3),
+                 SLO.gbps(32.0), priority=0),
+    ]
+    flows = FlowSet.build(specs)
+    cfg = baselines.make_sim_config(sys_cfg, n_ticks, tick_cycles=4,
+                                    k_grant=8, k_srv=8, k_eg=8,
+                                    comp_cap=1 << 17)
+    arr = gen_arrivals(flows, cfg, load_ref_gbps={1: 60.0})
+    if sys_cfg.shaping == baselines.SHAPING_HW:
+        # fine-grained pacing (64-cycle refill interval): latency-critical
+        # co-location needs smooth sub-us shaping, not 4 us refill chunks.
+        # VM1 is latency-critical: its SLO is enforced by shaping *others*
+        # (paper Sec. 4.3); its own bucket gets generous headroom.
+        plans = [tb.params_for_gbps(4.0, max_interval=64),
+                 tb.params_for_gbps(32.0, max_interval=64)]
+        # tight bucket for VM2: bursts must not overload the shared queue
+        plans[1] = dataclasses.replace(
+            plans[1], bkt_size=max(4 * 1500, plans[1].refill_rate))
+        tbs = tb.pack(plans)
+    else:
+        tbs = baselines.make_tb_state(sys_cfg, [tb.TBParams(1, 1, 1)] * 2)
+    res = simulate(flows, AccelTable.build([ACCEL]),
+                   LinkSpec(d2h_gbps=80.0, h2d_gbps=80.0, credits=256),
+                   cfg, tbs, *arr)
+    lat = res.flow_latencies(0)
+    lat = lat[len(lat) // 5:]  # warmup trim (sorted; trim is approximate)
+    out = dict(
+        vm1_avg_us=float(np.mean(lat) * 1e6) if len(lat) else float("nan"),
+        vm1_p99_us=float(np.percentile(lat, 99) * 1e6) if len(lat) else
+        float("nan"),
+        vm2_gbps=res.mean_ingress_gbps(1, flows),
+    )
+    return out
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows, payload = [], {}
+    n_ticks = 60_000 if quick else 250_000
+    results = {}
+    for sys_name in ("Arcus", "Bypassed_noTS_panic"):
+        with Timer() as t:
+            results[sys_name] = _run(sys_name, n_ticks)
+        rows.append(Row(f"fig9/{sys_name}", us_per_tick(t.s, n_ticks),
+                        results[sys_name]))
+    arc, byp = results["Arcus"], results["Bypassed_noTS_panic"]
+    rows.append(Row("fig9/claims", 0.0, dict(
+        p99_improvement_x=byp["vm1_p99_us"] / max(arc["vm1_p99_us"], 1e-9),
+        vm1_p99_under_1us=bool(arc["vm1_p99_us"] <= 1.0),
+        vm2_shaped_at_32g=bool(abs(arc["vm2_gbps"] - 32.0) < 1.5))))
+    payload.update(results)
+    save_json("fig9_bursty_tiny", payload)
+    return rows

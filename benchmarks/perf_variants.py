@@ -1,0 +1,75 @@
+"""§Perf hillclimb comparison: paper-faithful baseline vs optimized
+variants, recomputed from the saved dry-run artifacts.
+
+Pairs (EXPERIMENTS.md §Perf):
+  gemma3-12b x decode_32k      — seq-sharded KV (S over "model") + shard_map
+                                 partial-softmax + owned-shard cache writes
+  gemma3-12b x long_500k       — + head_dim over "model" (2-level combine)
+  llama4-maverick x prefill_32k — (32, 8) mesh refactor + gathered-weight
+                                 constraints
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, Row
+from benchmarks.roofline import ICI_BW, N_LINKS
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+PAIRS = [
+    ("gemma3-12b", "decode_32k", "seqattn", "unrolled"),
+    ("gemma3-12b", "long_500k", "seqattn2", "unrolled"),
+    ("llama4-maverick-400b-a17b", "prefill_32k", "mesh32x8_acts", "scanned"),
+    # generality check: the (32, 8) mesh refactor applied to the other
+    # head-indivisible archs (baselines are unrolled; variants scanned ->
+    # compare via the per-rep ratio, reported as-is)
+    ("qwen2.5-14b", "prefill_32k", "mesh32x8", "scanned"),
+    ("starcoder2-3b", "prefill_32k", "mesh32x8", "scanned"),
+]
+
+
+def _load(tag: str) -> dict | None:
+    p = os.path.join(DRYRUN_DIR, tag + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def _coll_bytes(rec: dict, level: str) -> float:
+    src = rec.get("unrolled", {}) if level == "unrolled" else rec
+    c = src.get("collectives")
+    if not isinstance(c, dict):
+        c = rec.get("collectives", {})
+    return sum(v for k, v in (c or {}).items() if not k.startswith("n_"))
+
+
+def _flops(rec: dict, level: str) -> float:
+    if level == "unrolled":
+        u = rec.get("unrolled", {})
+        if u.get("flops") and not u.get("approx"):
+            return u["flops"]
+    return rec.get("flops", 0.0)
+
+
+def run(quick: bool = False) -> list[Row]:
+    del quick
+    rows = []
+    for arch, shape, variant, level in PAIRS:
+        base = _load(f"{arch}__{shape}__pod")
+        opt = _load(f"{arch}__{shape}__pod__{variant}")
+        if not base or not opt or base.get("status") != "ok" \
+                or opt.get("status") != "ok":
+            continue
+        cb, co = _coll_bytes(base, level), _coll_bytes(opt, level)
+        fb, fo = _flops(base, level), _flops(opt, level)
+        rows.append(Row(f"perf/{arch}/{shape}", 0.0, dict(
+            variant=variant, level=level,
+            coll_gib_base=cb / 2**30, coll_gib_opt=co / 2**30,
+            coll_reduction_x=cb / max(co, 1.0),
+            coll_term_base_s=cb / (ICI_BW * N_LINKS),
+            coll_term_opt_s=co / (ICI_BW * N_LINKS),
+            flops_base=fb, flops_opt=fo)))
+    return rows

@@ -1,0 +1,162 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+For each (arch x shape) on the single-pod mesh, three terms in seconds:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HBM_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links x link_bw)
+
+Sources & caveats (documented measurements, see EXPERIMENTS.md §Roofline):
+  * FLOPs / collective bytes come from the *unrolled* lowering
+    (rec["unrolled"]): XLA's HLO cost analysis counts a while-loop body
+    once, not x trip-count, so the scanned module under-counts by ~reps.
+    cost_analysis of the SPMD-partitioned module is per device — the
+    "/ chips" of the assignment formulas is already applied.
+  * The memory term is ANALYTIC (weights + KV/state streams + activation
+    I/O per device).  The CPU backend's bytes_accessed is fusion-blind
+    (it counts every HLO op's operands; a TPU pass fuses most of them) and
+    overestimates ~10x; the analytic stream model is the honest
+    approximation of post-fusion HBM traffic.
+  * MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference);
+    usefulness = MODEL_FLOPS / (HLO_FLOPs x chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, Row, save_json
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config
+from repro.models import transformer as T
+from repro.serving.costmodel import (TPU_V5E, flops_per_token,
+                                     kv_bytes_per_token, param_bytes)
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+ICI_BW = TPU_V5E["ici"]
+N_LINKS = 4  # ICI links per chip on the v5e 2D torus
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    B, S = sh["global_batch"], sh["seq_len"]
+    n_active = param_bytes(cfg) / 2.0          # bf16 bytes -> active params
+    if sh["mode"] == "train":
+        return 6.0 * n_active * B * S
+    if sh["mode"] == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B                  # decode: one token/seq
+
+
+def total_param_bytes(cfg) -> float:
+    """All weights (bf16), incl. every expert — what streams from HBM."""
+    import jax
+    import numpy as np
+    shapes = jax.eval_shape(lambda: T.init_model_params_only(0, cfg))
+    return sum(2.0 * float(np.prod(x.shape))
+               for x in jax.tree.leaves(shapes))
+
+
+def memory_bytes_per_device(arch: str, shape: str, chips: int = 256) -> float:
+    """Analytic HBM traffic per device per step (post-fusion model)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    B, S = sh["global_batch"], sh["seq_len"]
+    E, L = cfg.d_model, cfg.n_layers
+    pb = total_param_bytes(cfg)
+    if sh["mode"] == "train":
+        # fwd read + bwd read (remat re-reads) + grad write + opt update
+        # (m, v, p fp32 read+write = 24 B/param) — all sharded over chips
+        w = pb * 3 + (pb / 2) * 24
+        acts = 3 * 2.0 * B * S * E * L * 2  # layer I/O x fwd+remat+bwd, bf16
+        return (w + acts) / chips
+    if sh["mode"] == "prefill":
+        acts = 2 * 2.0 * B * S * E * L   # layer I/O (KV writes subsumed)
+        return (pb + acts) / chips
+    # decode: weights + per-token KV/state stream per sequence
+    kv = kv_bytes_per_token(cfg, S) * B
+    return (pb + kv) / chips
+
+
+def analyze_record(rec: dict, prefill_unrolled: dict | None = None
+                   ) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    chips = rec.get("n_devices", 256)
+    u = rec.get("unrolled") or {}
+    if u.get("derive") == "4x_prefill" and prefill_unrolled:
+        # train_4k and prefill_32k carry the same 1.048M tokens:
+        # train = fwd + bwd(2x) + remat fwd = 4x prefill compute
+        flops = 4.0 * prefill_unrolled.get("flops", 0.0)
+        flops_src = "4x_prefill_unrolled"
+        # per-layer collectives also scale ~4x (gathers re-run in bwd/remat,
+        # grad reduce ~= activation gather volume)
+        coll = {k: 4.0 * v for k, v in
+                (prefill_unrolled.get("collectives") or {}).items()}
+    else:
+        flops = u.get("flops") or rec.get("flops", 0.0)
+        flops_src = ("unrolled" if u.get("flops") and not u.get("approx")
+                     else "scan_x_reps" if u.get("approx") else "scanned")
+        coll = (u.get("collectives")
+                if isinstance(u.get("collectives"), dict)
+                else rec.get("collectives", {})) or {}
+    coll_bytes = sum(v for k, v in coll.items() if not k.startswith("n_"))
+    t_c = flops / TPU_V5E["flops"]
+    t_m = memory_bytes_per_device(arch, shape, chips) / TPU_V5E["hbm"]
+    t_x = coll_bytes / (ICI_BW * N_LINKS)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    useful = mf / max(flops * chips, 1.0)
+    return dict(arch=arch, shape=shape, mesh=rec["mesh"],
+                compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                dominant=dominant, model_flops=mf,
+                useful_ratio=useful, bound_step_s=max(terms.values()),
+                collective_bytes=coll_bytes, flops_src=flops_src,
+                hlo_flops_per_dev=flops)
+
+
+def load_all(mesh: str = "pod") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    prefill_u = {r["arch"]: r.get("unrolled") for r in recs
+                 if r.get("shape") == "prefill_32k"
+                 and isinstance(r.get("unrolled"), dict)
+                 and not r["unrolled"].get("approx")}
+    out = []
+    for rec in recs:
+        a = analyze_record(rec, prefill_unrolled=prefill_u.get(rec.get("arch")))
+        if a:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | flops src |\n|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+        f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+        f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+        f"| {r['flops_src']} |\n"
+        for r in rows)
+    return hdr + body
+
+
+def run(quick: bool = False) -> list[Row]:
+    del quick
+    rows = []
+    all_rows = load_all("pod")
+    for r in all_rows:
+        rows.append(Row(f"roofline/{r['arch']}/{r['shape']}", 0.0, dict(
+            compute_s=r["compute_s"], memory_s=r["memory_s"],
+            collective_s=r["collective_s"], dominant=r["dominant"],
+            useful=r["useful_ratio"])))
+    save_json("roofline", all_rows)
+    with open(os.path.join(RESULTS_DIR, "roofline.md"), "w") as f:
+        f.write(markdown_table(all_rows))
+    return rows

@@ -1,0 +1,63 @@
+"""Table 2 — accurate traffic shaping from 1 Gbps to 1000 Gbps.
+
+For each SLO we (a) verify the paper's published register values give a
+shaped rate >= the SLO (their table carries headroom at 1 Gbps), and
+(b) derive our own (Refill_Rate, Bkt_Size, Interval) with the control
+plane's planner and measure the achieved rate end-to-end in the
+cycle-accurate dataplane.  Claim: cycle-level hardware shaping holds the
+achieved rate within ~1% of the target (vs >10 us software timers).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import token_bucket as tb
+from repro.core.accelerator import AcceleratorSpec, AccelTable, CURVE_LINEAR
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals, simulate
+
+SLOS_GBPS = (1, 10, 100, 1000)
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows, payload = [], {}
+    for slo in SLOS_GBPS:
+        # paper's parameters: analytic shaped rate
+        pp = tb.PAPER_TABLE2[slo]
+        paper_rate = tb.achieved_rate(pp) * 8 / 1e9
+        # our planner
+        ours = tb.params_for_gbps(float(slo))
+        plan_rate = tb.achieved_rate(ours) * 8 / 1e9
+        # measured end-to-end (headroom on every other resource)
+        msg = 1024 if slo <= 100 else 8192
+        accel = AcceleratorSpec("wire", peak_gbps=4 * slo,
+                                curve=CURVE_LINEAR, overhead_ns=5.0)
+        link = LinkSpec(h2d_gbps=4 * slo, d2h_gbps=4 * slo, efficiency=1.0,
+                        credits=4096)
+        spec = FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                        TrafficPattern(msg, load=0.9), SLO.gbps(slo))
+        flows = FlowSet.build([spec])
+        n_ticks = 40_000 if quick else 150_000
+        # comp_cap must cover every completion in the measured window
+        # (1000 Gbps / 8KB -> ~73K completions over 4.8 ms)
+        cfg = SimConfig(n_ticks=n_ticks, shaping=SHAPING_HW,
+                        k_grant=8, k_srv=8, k_eg=8, comp_cap=1 << 17)
+        arr = gen_arrivals(flows, cfg, load_ref_gbps={0: 2.0 * slo})
+        with Timer() as t:
+            res = simulate(flows, AccelTable.build([accel]), link, cfg,
+                           tb.pack([ours]), *arr)
+        warm = 0.25 * res.seconds
+        sel = res.comp_t_s >= warm
+        meas = res.comp_sz[sel].sum() * 8 / (res.seconds - warm) / 1e9
+        err = (meas - slo) / slo
+        rows.append(Row(
+            f"table2/slo_{slo}gbps", us_per_tick(t.s, n_ticks),
+            dict(paper_params_gbps=paper_rate, planned_gbps=plan_rate,
+                 measured_gbps=meas, err_pct=100 * err,
+                 refill=ours.refill_rate, bkt=ours.bkt_size,
+                 interval=ours.interval)))
+        payload[slo] = rows[-1].derived
+    save_json("table2_shaping_accuracy", payload)
+    return rows

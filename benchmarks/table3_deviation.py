@@ -1,0 +1,20 @@
+"""Table 3 — throughput deviation from the rate-limit target.
+
+Thin view over the Fig. 6 experiment (same run, Table 3 is its VM1
+percentile table)."""
+from __future__ import annotations
+
+from benchmarks import fig6_throughput_cdf as fig6
+from benchmarks.common import Row, save_json
+
+
+def run(quick: bool = False) -> list[Row]:
+    out = fig6._experiment(quick)
+    rows, payload = [], {}
+    for sys_name, (var, _lat) in out.items():
+        res = var[0]
+        d = fig6.deviation_percentiles(res, 0, fig6.SLO1)
+        rows.append(Row(f"table3/{sys_name}", 0.0, d))
+        payload[sys_name] = d
+    save_json("table3_deviation", payload)
+    return rows

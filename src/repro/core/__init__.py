@@ -1,0 +1,23 @@
+"""Arcus core: SLO management for accelerators with proactive traffic
+shaping (the paper's primary contribution), in JAX.
+
+Layers:
+  flow / token_bucket / accelerator / interconnect — abstractions & models
+  sim        — cycle-accurate jitted dataplane (lax.scan)
+  shaper     — ReshapeDecision: rate pacing + message re-sizing
+  profiler   — offline Capacity(t, X, N) tables
+  runtime    — Algorithm 1 control plane (admission, capacity, re-shaping)
+  baselines  — Host_noTS / Host_TS_* / Bypassed_noTS_panic configurations
+  policies   — Reserved / OnDemand / ManagedBurst / Opportunistic SLOs
+"""
+from repro.core.flow import (SLO, FlowSet, FlowSpec, Path, SLOKind,
+                             TrafficPattern)
+from repro.core.token_bucket import (MODE_GBPS, MODE_IOPS, PAPER_TABLE2,
+                                     TBParams, TBState, params_for_gbps,
+                                     params_for_iops)
+
+__all__ = [
+    "SLO", "FlowSet", "FlowSpec", "Path", "SLOKind", "TrafficPattern",
+    "MODE_GBPS", "MODE_IOPS", "PAPER_TABLE2", "TBParams", "TBState",
+    "params_for_gbps", "params_for_iops",
+]

@@ -1,0 +1,190 @@
+"""Heterogeneous accelerator models (Arcus §2.2 "non-linearity").
+
+Each accelerator has (1) a non-linear compute-throughput vs. input-message-
+size curve (Fig. 7(a): logarithmic / exponential / ad-hoc) and (2) an
+egress/ingress bandwidth ratio R = Eb/Ib in {=1, >1, <1, fixed-egress}
+(AES, decompression, compression, SHA-3-512 respectively).
+
+The simulator consumes these as pure arrays: for the jitted dataplane we
+pre-tabulate service time and egress size as functions of message size on a
+log2 grid and interpolate inside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+CURVE_LINEAR = "linear"
+CURVE_LOG = "log"
+CURVE_EXP = "exp"
+CURVE_ADHOC = "adhoc"
+
+R_EQUAL = "equal"        # R = 1        (e.g. AES-256-CTR)
+R_EXPAND = "expand"      # R > 1        (decompression)
+R_SHRINK = "shrink"      # R < 1        (compression)
+R_FIXED = "fixed"        # Eb fixed     (SHA-3-512: 64B digest)
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    name: str
+    peak_gbps: float               # max compute throughput at ideal msg size
+    curve: str = CURVE_EXP
+    curve_ref_bytes: float = 1024.0  # knee of the curve
+    r_kind: str = R_EQUAL
+    r_value: float = 1.0           # egress = r_value * ingress (expand/shrink)
+    fixed_egress_bytes: int = 64   # for R_FIXED
+    overhead_ns: float = 120.0     # fixed per-message pipeline overhead
+    parallelism: int = 1           # independent lanes
+    # optional explicit service-time anchors ((bytes, us), ...): overrides
+    # the curve; log-space interpolated.  Used for devices whose cost is
+    # operation- rather than bandwidth-dominated (e.g. SSD reads vs writes).
+    service_us_at: tuple = ()
+
+    # ------------------------------------------------------------------
+    def throughput_gbps(self, msg_bytes: np.ndarray) -> np.ndarray:
+        """Compute throughput sustained when fed messages of this size."""
+        m = np.asarray(msg_bytes, np.float64)
+        ref = self.curve_ref_bytes
+        if self.curve == CURVE_LINEAR:
+            f = np.ones_like(m)
+        elif self.curve == CURVE_LOG:
+            # saturates slowly; small messages very inefficient
+            f = np.log2(1.0 + m / ref) / np.log2(1.0 + 65536.0 / ref)
+            f = np.minimum(f, 1.0)
+        elif self.curve == CURVE_EXP:
+            f = 1.0 - np.exp(-m / ref)
+        elif self.curve == CURVE_ADHOC:
+            # uniquely ad-hoc (Fig. 7a): efficiency dips when messages are
+            # not multiples of the internal block (e.g. 4KB) + slow ramp.
+            base = 1.0 - np.exp(-m / ref)
+            block = 4096.0
+            frag = np.where(m >= block, (m % block) / block, 0.0)
+            f = base * (1.0 - 0.35 * frag)
+        else:
+            raise ValueError(self.curve)
+        return self.peak_gbps * np.maximum(f, 1e-3)
+
+    def service_time_s(self, msg_bytes: np.ndarray) -> np.ndarray:
+        """Time one lane takes to process a message of the given size."""
+        m = np.asarray(msg_bytes, np.float64)
+        if self.service_us_at:
+            xs = np.log2([b for b, _ in self.service_us_at])
+            ys = np.log2([u * 1e-6 for _, u in self.service_us_at])
+            return np.exp2(np.interp(np.log2(np.maximum(m, 1.0)), xs, ys))
+        bps = self.throughput_gbps(m) * 1e9 / 8.0
+        return m / bps + self.overhead_ns * 1e-9
+
+    def effective_gbps(self, msg_bytes) -> float:
+        """Sustained single-lane throughput incl. per-message overhead."""
+        m = float(np.asarray(msg_bytes, np.float64))
+        return m * 8 / float(self.service_time_s(m)) / 1e9 * self.parallelism
+
+    def egress_bytes(self, msg_bytes: np.ndarray) -> np.ndarray:
+        m = np.asarray(msg_bytes, np.float64)
+        if self.r_kind == R_FIXED:
+            return np.full_like(m, float(self.fixed_egress_bytes))
+        return m * self.r_value
+
+
+# ---------------------------------------------------------------------------
+# Catalogue used across the paper's experiments
+# ---------------------------------------------------------------------------
+
+CATALOG = {
+    # The 32 Gbps IPSec accelerator of Sec 3.1 (full load at MTU-size msgs;
+    # tiny messages collapse throughput, Fig. 3b).
+    "ipsec32": AcceleratorSpec("ipsec32", peak_gbps=32.0, curve=CURVE_EXP,
+                               curve_ref_bytes=200.0, r_kind=R_EQUAL,
+                               overhead_ns=10.0),
+    # Synthetic 50 Gbps accelerator of CaseP studies (linear, no interface
+    # effects — isolates communication contention).
+    "synthetic50": AcceleratorSpec("synthetic50", peak_gbps=50.0,
+                                   curve=CURVE_LINEAR, r_kind=R_EQUAL,
+                                   overhead_ns=40.0),
+    "aes256": AcceleratorSpec("aes256", peak_gbps=40.0, curve=CURVE_EXP,
+                              curve_ref_bytes=512.0, r_kind=R_EQUAL),
+    "sha3_512": AcceleratorSpec("sha3_512", peak_gbps=24.0, curve=CURVE_LOG,
+                                curve_ref_bytes=2048.0, r_kind=R_FIXED,
+                                fixed_egress_bytes=64),
+    "compress": AcceleratorSpec("compress", peak_gbps=20.0, curve=CURVE_ADHOC,
+                                curve_ref_bytes=4096.0, r_kind=R_SHRINK,
+                                r_value=0.4),
+    "decompress": AcceleratorSpec("decompress", peak_gbps=20.0,
+                                  curve=CURVE_ADHOC, curve_ref_bytes=4096.0,
+                                  r_kind=R_EXPAND, r_value=2.5),
+    # pipelined packet-rate crypto engines (SmartNIC datapath: good at
+    # small messages, unlike the bulk-oriented log/exp engines above)
+    "sha1_hmac": AcceleratorSpec("sha1_hmac", peak_gbps=28.0, curve=CURVE_EXP,
+                                 curve_ref_bytes=48.0, r_kind=R_FIXED,
+                                 fixed_egress_bytes=20, overhead_ns=100.0,
+                                 parallelism=2),
+    "aes128_cbc": AcceleratorSpec("aes128_cbc", peak_gbps=36.0, curve=CURVE_EXP,
+                                  curve_ref_bytes=48.0, r_kind=R_EQUAL,
+                                  overhead_ns=100.0, parallelism=2),
+    # NVMe-backed storage engine for the FIO / storage experiments: service
+    # time dominated by ~100us flash access, hidden by deep queue
+    # parallelism (RAID-0 x4 x QD16).
+    "nvme_raid0": AcceleratorSpec("nvme_raid0", peak_gbps=26.0,
+                                  curve=CURVE_LINEAR, r_kind=R_EQUAL,
+                                  overhead_ns=100_000.0, parallelism=64),
+    # Checksum accelerator for the RocksDB offload experiment.
+    "crc32c": AcceleratorSpec("crc32c", peak_gbps=48.0, curve=CURVE_EXP,
+                              curve_ref_bytes=256.0, r_kind=R_FIXED,
+                              fixed_egress_bytes=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# Tabulation for the jitted dataplane
+# ---------------------------------------------------------------------------
+
+#: log2-spaced grid of message sizes used for in-scan interpolation
+GRID_LOG2_MIN, GRID_LOG2_MAX, GRID_N = 5, 20, 31  # 32B ... 1MB
+
+
+def size_grid() -> np.ndarray:
+    return np.logspace(GRID_LOG2_MIN, GRID_LOG2_MAX, GRID_N, base=2.0)
+
+
+@dataclasses.dataclass
+class AccelTable:
+    """Pre-tabulated per-accelerator service curves for A accelerators."""
+
+    n: int
+    service_cycles: np.ndarray   # [A, GRID_N] float32 — service time in cycles
+    egress_bytes: np.ndarray     # [A, GRID_N] float32
+    parallelism: np.ndarray      # [A] int32
+    names: Sequence[str] = dataclasses.field(default_factory=list)
+
+    @staticmethod
+    def build(specs: Sequence[AcceleratorSpec], clock_hz: float = 250e6
+              ) -> "AccelTable":
+        grid = size_grid()
+        sc = np.stack([s.service_time_s(grid) * clock_hz for s in specs])
+        eg = np.stack([s.egress_bytes(grid) for s in specs])
+        return AccelTable(
+            n=len(specs),
+            service_cycles=sc.astype(np.float32),
+            egress_bytes=eg.astype(np.float32),
+            parallelism=np.array([s.parallelism for s in specs], np.int32),
+            names=[s.name for s in specs],
+        )
+
+
+def interp_grid(table_row_major, accel_id, msg_bytes):
+    """Interpolate a [A, GRID_N] table at (accel_id, msg_bytes) — jnp ok."""
+    import jax.numpy as jnp
+    m = jnp.maximum(jnp.asarray(msg_bytes, jnp.float32), 1.0)
+    x = (jnp.log2(m) - GRID_LOG2_MIN) / (GRID_LOG2_MAX - GRID_LOG2_MIN) * (GRID_N - 1)
+    x = jnp.clip(x, 0.0, GRID_N - 1.001)
+    i0 = x.astype(jnp.int32)
+    frac = x - i0
+    row = table_row_major[accel_id]
+    v0 = jnp.take_along_axis(row, i0[..., None], axis=-1)[..., 0] if row.ndim > 1 \
+        else row[i0]
+    v1 = jnp.take_along_axis(row, (i0 + 1)[..., None], axis=-1)[..., 0] if row.ndim > 1 \
+        else row[i0 + 1]
+    return v0 * (1 - frac) + v1 * frac

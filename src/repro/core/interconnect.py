@@ -1,0 +1,72 @@
+"""Communication-resource model (Arcus §2.2, §3.1 communication-related
+contention).
+
+Models the insufficiently-isolated components the paper identifies:
+  * a full-duplex host<->device interconnect (PCIe Gen 3.0 x8 in the paper's
+    prototype) with independent per-direction capacity,
+  * a root-complex / shared-buffer credit pool drained by in-flight messages,
+  * the arbiter that multiplexes flows onto the interconnect (round-robin /
+    weighted RR / weighted-fair / strict priority) — the PANIC-style
+    interface of the baselines.
+
+Capacities are expressed as bytes-per-cycle so the jitted dataplane can work
+in integer cycle time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+ARB_RR = 0
+ARB_WRR = 1
+ARB_PRIORITY = 2
+ARB_WFQ = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Full-duplex interconnect + credit pool.
+
+    Defaults model PCIe Gen 3.0 x8: 7.88 GB/s raw per direction; effective
+    payload bandwidth ~85% after TLP overheads (the paper's CaseP_multi_path
+    reaches 85% of ideal).
+    """
+
+    h2d_gbps: float = 63.0       # Gbit/s per direction (Gen3 x8)
+    d2h_gbps: float = 63.0
+    efficiency: float = 0.85
+    clock_hz: float = 250e6
+    credits: int = 64            # root-complex buffer credits (in-flight msgs)
+    mtu_bytes: int = 4096        # max TLP burst granted per flow per round
+    # per-message fabric overhead (descriptor fetch + doorbell + TLP headers
+    # + completion): the reason 64B messages see a fraction of line rate
+    # (Sec. 3.1 communication-related inaccuracy).
+    msg_overhead_bytes: int = 100
+
+    def bytes_per_cycle(self) -> tuple[float, float]:
+        h2d = self.h2d_gbps * self.efficiency * 1e9 / 8.0 / self.clock_hz
+        d2h = self.d2h_gbps * self.efficiency * 1e9 / 8.0 / self.clock_hz
+        return h2d, d2h
+
+
+def arbiter_weights(kind: int, n: int, weight: np.ndarray,
+                    priority: np.ndarray) -> np.ndarray:
+    """Static per-flow service quanta for the arbiters used by baselines.
+
+    Returns [N] float32 'quantum' multipliers: the relative share of link
+    budget a flow may claim per round. RR = equal; WRR/WFQ = by weight;
+    PRIORITY = lexicographic (modeled as exponential weighting, which is how
+    strict priority behaves under saturation).
+    """
+    if kind == ARB_RR:
+        w = np.ones(n)
+    elif kind in (ARB_WRR, ARB_WFQ):
+        w = np.asarray(weight, np.float64).copy()
+    elif kind == ARB_PRIORITY:
+        p = np.asarray(priority, np.float64)
+        w = 16.0 ** (p - p.min())
+    else:
+        raise ValueError(kind)
+    w = w / w.sum()
+    return w.astype(np.float32)

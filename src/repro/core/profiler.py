@@ -1,0 +1,133 @@
+"""Offline profiling -> Capacity(t, X, N) tables (Arcus §3.3, §4.3).
+
+"We propose to perform offline profiling to learn Capacity(t, X, N), i.e.,
+the available capacity of an accelerator X at a given time t shared by N
+VMs, w.r.t. traffic patterns T, path mode combinations P, and system
+settings S."
+
+A *context* is (accelerator, [(path, msg-size bucket, load bucket)] per
+flow).  For each context the profiler runs a short, unshaped, full-load
+dataplane simulation and records the aggregate achievable capacity and the
+per-flow split.  Entries carry a 1-bit SLO-Friendly / SLO-Violating tag,
+evaluated against a concrete SLO vector at query time (and re-run whenever a
+new flow registers, Sec. 5.3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+
+import numpy as np
+
+from repro.core import baselines, token_bucket as tb
+from repro.core.accelerator import AccelTable, AcceleratorSpec
+from repro.core.flow import (SLO, FlowSet, FlowSpec, Path, TrafficPattern)
+from repro.core.interconnect import ARB_RR, LinkSpec
+from repro.core.sim import SHAPING_NONE, SimConfig, gen_arrivals, simulate
+
+
+def msg_bucket(msg_bytes: int) -> int:
+    """Log2 bucket of the message size (64B..1MB)."""
+    return int(np.clip(np.round(np.log2(max(msg_bytes, 1))), 6, 20))
+
+
+def context_key(accel_name: str,
+                flows: list[tuple[Path, int, float]]) -> str:
+    """Canonical context: accel + sorted (path, msg bucket, load decile)."""
+    parts = sorted((int(p), msg_bucket(m), int(round(l * 10)))
+                   for p, m, l in flows)
+    return accel_name + "|" + ";".join(f"{p}.{m}.{l}" for p, m, l in parts)
+
+
+@dataclasses.dataclass
+class CapacityEntry:
+    capacity_gbps: float           # aggregate ingress goodput achievable
+    per_flow_gbps: list[float]     # split under fair arbitration
+    fairness: float                # Jain's index of the split
+    ctx: str = ""
+
+    def slo_tag(self, slo_gbps: list[float], margin: float = 0.02) -> bool:
+        """True = SLO-Friendly: requested SLOs fit the profiled capacity and
+        no single SLO exceeds what contention lets one flow reach."""
+        total_ok = sum(slo_gbps) <= self.capacity_gbps * (1 - margin)
+        return bool(total_ok)
+
+
+class ProfileTable:
+    """The ProfileTable of Sec. 4.3 — pointer per context to profiled
+    Capacity results."""
+
+    def __init__(self, link: LinkSpec | None = None,
+                 *, n_ticks: int = 60_000, tick_cycles: int = 8):
+        self.entries: dict[str, CapacityEntry] = {}
+        self.link = link or LinkSpec()
+        self.n_ticks = n_ticks
+        self.tick_cycles = tick_cycles
+
+    # -- profiling ------------------------------------------------------
+    def profile_context(self, accel: AcceleratorSpec,
+                        flows: list[tuple[Path, int, float]],
+                        *, seed: int = 0) -> CapacityEntry:
+        key = context_key(accel.name, flows)
+        if key in self.entries:
+            return self.entries[key]
+        specs = [
+            FlowSpec(i, i, p, 0,
+                     TrafficPattern(msg_bytes=m, load=max(l, 0.99),
+                                    process="poisson"),
+                     SLO.gbps(1e9), weight=1.0)
+            for i, (p, m, l) in enumerate(flows)
+        ]
+        fset = FlowSet.build(specs)
+        atab = AccelTable.build([accel])
+        cfg = SimConfig(n_ticks=self.n_ticks, tick_cycles=self.tick_cycles,
+                        shaping=SHAPING_NONE, arbiter=ARB_RR)
+        ref = {i: accel.peak_gbps for i in range(len(specs))}
+        arr_t, arr_sz = gen_arrivals(fset, cfg, seed=seed, load_ref_gbps=ref)
+        tbs = baselines.make_tb_state(baselines.HOST_NO_TS,
+                                      [tb.TBParams(1, 1, 1)] * len(specs))
+        res = simulate(fset, atab, self.link, cfg, tbs, arr_t, arr_sz)
+        per = [res.mean_ingress_gbps(i, fset) for i in range(len(specs))]
+        x = np.asarray(per)
+        fair = float((x.sum() ** 2) / (len(x) * (x ** 2).sum() + 1e-12))
+        entry = CapacityEntry(float(x.sum()), per, fair, key)
+        self.entries[key] = entry
+        return entry
+
+    def sweep(self, accel: AcceleratorSpec, *, paths=(Path.FUNCTION_CALL,),
+              msg_sizes=(64, 512, 4096), loads=(0.9,),
+              n_flows=(1, 2)) -> None:
+        """Offline sweep: "all contention cases are swept and recorded"."""
+        for n in n_flows:
+            combos = itertools.combinations_with_replacement(
+                itertools.product(paths, msg_sizes, loads), n)
+            for combo in combos:
+                self.profile_context(accel, list(combo))
+
+    # -- queries --------------------------------------------------------
+    def lookup(self, accel_name: str,
+               flows: list[tuple[Path, int, float]]) -> CapacityEntry | None:
+        return self.entries.get(context_key(accel_name, flows))
+
+    def capacity(self, accel: AcceleratorSpec,
+                 flows: list[tuple[Path, int, float]]) -> CapacityEntry:
+        """Lookup; profile on miss (the paper sweeps offline — on-miss
+        profiling keeps the repo usable without a pre-baked table)."""
+        hit = self.lookup(accel.name, flows)
+        return hit if hit is not None else self.profile_context(accel, flows)
+
+    # -- persistence ----------------------------------------------------
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({k: dataclasses.asdict(v)
+                       for k, v in self.entries.items()}, f, indent=1)
+
+    @classmethod
+    def from_json(cls, path: str, link: LinkSpec | None = None
+                  ) -> "ProfileTable":
+        t = cls(link)
+        with open(path) as f:
+            for k, v in json.load(f).items():
+                t.entries[k] = CapacityEntry(**v)
+        return t

@@ -1,0 +1,229 @@
+"""Arcus control-plane runtime — Algorithm 1 (Sec. 4.3).
+
+Runs on every client server; periodically:
+  * reads per-flow hardware counters (SLOViolationChecker),
+  * re-adjusts shaping (ReAdjustPattern = PathSelection + ReshapeDecision,
+    committed to the parameter registers without stopping the dataplane),
+  * admits/rejects new registrations (AdmissionControl + CapacityPlanning
+    over the ProfileTable and PerFlowStatusTable).
+
+The dataplane is the jitted simulator (`repro.core.sim`); register writes
+are the carry's TBState parameter fields — the MMIO analogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import token_bucket as tb
+from repro.core.accelerator import AccelTable, AcceleratorSpec
+from repro.core.flow import (PATH_EGRESS_DIR, PATH_INGRESS_DIR, SLO, FlowSet,
+                             FlowSpec, Path, SLOKind)
+from repro.core.interconnect import ARB_RR, LinkSpec
+from repro.core.profiler import ProfileTable
+from repro.core.shaper import reshape_decision
+from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals, simulate
+
+
+@dataclasses.dataclass
+class FlowStatus:
+    """One PerFlowStatusTable entry (Sec. 4.3 "Capacity planning")."""
+
+    spec: FlowSpec                    # VM id, path id, accelerator id, SLO
+    params: tb.TBParams               # mechanism parameters configured
+    headroom: float = 1.0             # control-knob: pacing over-provision
+    measured: float = float("nan")    # current SLO status (hw counters)
+    violations: int = 0
+    reconfigs: int = 0
+    accepted: bool = True
+
+
+@dataclasses.dataclass
+class WindowReport:
+    t_end_s: float
+    measured: dict[int, float]
+    violated: list[int]
+    reconfigured: list[int]
+    path_changes: list[tuple[int, int, int]]
+
+
+class ArcusRuntime:
+    """SLO manager for one client server (Algorithm 1)."""
+
+    def __init__(self, accels: list[AcceleratorSpec],
+                 link: LinkSpec | None = None,
+                 profile_table: ProfileTable | None = None,
+                 *, clock_hz: float = 250e6, slo_tol: float = 0.02,
+                 alt_paths: dict[int, list[Path]] | None = None):
+        self.accel_specs = accels
+        self.link = link or LinkSpec()
+        self.profile = profile_table or ProfileTable(self.link)
+        self.clock_hz = clock_hz
+        self.slo_tol = slo_tol
+        self.alt_paths = alt_paths or {}
+        self.table: dict[int, FlowStatus] = {}   # PerFlowStatusTable
+        self._prev_counters: dict[str, np.ndarray] | None = None
+
+    # ------------------------------------------------------------------
+    # Registration path (Algorithm 1 lines 7-10)
+    # ------------------------------------------------------------------
+    def register(self, spec: FlowSpec) -> bool:
+        if not self._admission_control(spec):
+            return False                       # Reject registration (line 9)
+        decision = reshape_decision(self.accel_specs[spec.accel_id],
+                                    spec.slo, spec.pattern.msg_bytes,
+                                    clock_hz=self.clock_hz)
+        self.table[spec.flow_id] = FlowStatus(spec=spec,
+                                              params=decision.params)
+        return True
+
+    def _admission_control(self, spec: FlowSpec) -> bool:
+        """CapacityPlanning(CHECK): profiled capacity for the would-be
+        context minus already-committed SLOs must cover the new SLO."""
+        accel = self.accel_specs[spec.accel_id]
+        ctx = [(s.spec.path, s.spec.pattern.msg_bytes, s.spec.pattern.load)
+               for s in self.table.values()
+               if s.spec.accel_id == spec.accel_id]
+        ctx.append((spec.path, spec.pattern.msg_bytes, spec.pattern.load))
+        entry = self.profile.capacity(accel, ctx)
+        committed = sum(self._slo_gbps(s.spec) for s in self.table.values()
+                        if s.spec.accel_id == spec.accel_id)
+        want = self._slo_gbps(spec)
+        return entry.slo_tag([committed + want])
+
+    def _slo_gbps(self, spec: FlowSpec) -> float:
+        if spec.slo.kind == SLOKind.GBPS:
+            return spec.slo.target
+        if spec.slo.kind == SLOKind.IOPS:
+            return spec.slo.target * spec.pattern.msg_bytes * 8 / 1e9
+        return 0.0  # latency SLOs are enforced by shaping others, not pacing
+
+    # ------------------------------------------------------------------
+    # Managed execution: dataplane windows + periodic Algorithm 1 pass
+    # ------------------------------------------------------------------
+    def run_managed(self, *, total_ticks: int, window_ticks: int,
+                    tick_cycles: int = 8, seed: int = 0,
+                    arrivals: tuple[np.ndarray, np.ndarray] | None = None,
+                    load_ref_gbps: dict[int, float] | None = None,
+                    sim_kwargs: dict[str, Any] | None = None):
+        """Run the dataplane with periodic SLO management.
+
+        Returns (SimResult of the last window — containing the full
+        completion history ring — and the list of WindowReports)."""
+        flows = self._flowset()
+        atab = AccelTable.build(self.accel_specs, self.clock_hz)
+        cfg = SimConfig(n_ticks=window_ticks, tick_cycles=tick_cycles,
+                        shaping=SHAPING_HW, arbiter=ARB_RR,
+                        **(sim_kwargs or {}))
+        full_cfg = dataclasses.replace(cfg, n_ticks=total_ticks)
+        if arrivals is None:
+            arrivals = gen_arrivals(flows, full_cfg, seed=seed,
+                                    load_ref_gbps=load_ref_gbps)
+        arr_t, arr_sz = arrivals
+        carry = None
+        reports: list[WindowReport] = []
+        result = None
+        self._prev_counters = None
+        for w in range(total_ticks // window_ticks):
+            tbs = tb.pack([self.table[f].params for f in sorted(self.table)])
+            result, carry = simulate(
+                flows, atab, self.link, cfg, tbs, arr_t, arr_sz,
+                t0_ticks=w * window_ticks, carry=carry, return_carry=True)
+            reports.append(self._algorithm1_pass(result, cfg))
+            flows = self._flowset()   # path changes take effect next window
+        return result, reports
+
+    def _flowset(self) -> FlowSet:
+        return FlowSet.build([self.table[f].spec for f in sorted(self.table)])
+
+    # ------------------------------------------------------------------
+    # Algorithm 1 main loop body (lines 3-6)
+    # ------------------------------------------------------------------
+    def _algorithm1_pass(self, result, cfg: SimConfig) -> WindowReport:
+        window_s = cfg.n_ticks * cfg.tick_cycles / self.clock_hz
+        cur = {k: np.array(v) for k, v in result.counters.items()}
+        prev = self._prev_counters or {k: np.zeros_like(v)
+                                       for k, v in cur.items()}
+        self._prev_counters = cur
+        measured, violated, reconfigured, path_changes = {}, [], [], []
+        for i, fid in enumerate(sorted(self.table)):
+            st = self.table[fid]
+            if st.spec.slo.kind == SLOKind.IOPS:
+                meas = (cur["c_done_msgs"][i] - prev["c_done_msgs"][i]) / window_s
+            else:
+                meas = ((cur["c_done_bytes"][i] - prev["c_done_bytes"][i])
+                        * 8 / window_s / 1e9)
+            st.measured = float(meas)
+            measured[fid] = st.measured
+            if not self._slo_ok(st):
+                st.violations += 1
+                violated.append(fid)
+                changed = self._re_adjust_pattern(st, cur, prev, window_s)
+                if changed:
+                    reconfigured.append(fid)
+                    if changed == "path":
+                        path_changes.append(
+                            (fid, int(st.spec.path), int(st.spec.path)))
+        return WindowReport(result.seconds, measured, violated,
+                            reconfigured, path_changes)
+
+    def _slo_ok(self, st: FlowStatus) -> bool:
+        """SLOViolationChecker (lines 11-13)."""
+        slo = st.spec.slo
+        if slo.kind == SLOKind.LATENCY:
+            return True  # checked from completion records by callers
+        return st.measured >= slo.target * (1 - self.slo_tol)
+
+    def _re_adjust_pattern(self, st: FlowStatus, cur, prev, window_s: float):
+        """ReAdjustPattern (lines 17-21)."""
+        changed = None
+        new_path = self._path_selection(st, cur, prev, window_s)
+        if new_path is not None:
+            st.spec = dataclasses.replace(st.spec, path=new_path)
+            changed = "path"
+        # ReshapeDecision: widen pacing headroom toward the observed deficit
+        target = (st.spec.slo.target if st.spec.slo.kind != SLOKind.LATENCY
+                  else None)
+        if target:
+            deficit = target / max(st.measured, 1e-9)
+            st.headroom = float(np.clip(st.headroom * min(deficit, 1.25),
+                                        1.0, 2.0))
+            decision = reshape_decision(self.accel_specs[st.spec.accel_id],
+                                        st.spec.slo, st.spec.pattern.msg_bytes,
+                                        clock_hz=self.clock_hz,
+                                        headroom=st.headroom)
+            if decision.params != st.params:
+                st.params = decision.params   # register write next window
+                st.reconfigs += 1
+                changed = changed or "params"
+        return changed
+
+    def _path_selection(self, st: FlowStatus, cur, prev,
+                        window_s: float) -> Path | None:
+        """PathSelection (line 18): move to a less-loaded path if the current
+        ingress direction is saturated and an alternative exists."""
+        alts = self.alt_paths.get(st.spec.accel_id, [])
+        if not alts:
+            return None
+        util = self._direction_util(cur, prev, window_s)
+        cur_dir = PATH_INGRESS_DIR[st.spec.path]
+        if cur_dir == 2 or util[cur_dir] < 0.9:
+            return None
+        for p in alts:
+            d = PATH_INGRESS_DIR[p]
+            if p != st.spec.path and (d == 2 or util[d] < 0.7):
+                return p
+        return None
+
+    def _direction_util(self, cur, prev, window_s: float) -> np.ndarray:
+        h2d_bps = self.link.h2d_gbps * self.link.efficiency * 1e9 / 8
+        d2h_bps = self.link.d2h_gbps * self.link.efficiency * 1e9 / 8
+        by_dir = np.zeros(3)
+        for i, fid in enumerate(sorted(self.table)):
+            st = self.table[fid]
+            b = (cur["c_adm_bytes"][i] - prev["c_adm_bytes"][i]) / window_s
+            d = PATH_INGRESS_DIR[st.spec.path]
+            by_dir[d] += b
+        return np.array([by_dir[0] / h2d_bps, by_dir[1] / d2h_bps, 0.0])

@@ -1,0 +1,176 @@
+"""Per-flow token-bucket rate limiter (Arcus §4.2), vectorized over flows.
+
+The hardware mechanism pairs a token bucket with each per-flow queue.  Two
+parameters are exposed as MMIO registers (`Refill_Rate`, `Bkt_Size`); a
+hardware timer adds `Refill_Rate` tokens to the bucket every `Interval`
+cycles.  Two shaping modes exist: Gbps (tokens = bytes) and IOPS
+(tokens = messages).  This module is the pure-JAX reference used by the
+cycle-accurate simulator and the serving scheduler; the Pallas kernel in
+``repro.kernels.token_bucket`` implements the same semantics as the
+"offloaded hardware" analogue and is validated against this code.
+
+Semantics (exactly what the sim + kernel implement):
+  * state: tokens[N] (int64-safe int32 range), cyc[N] residual cycle counter
+  * advance by E cycles:  k = (cyc + E) // interval  refills happen,
+      tokens <- min(bkt_size, tokens + k * refill_rate)
+      cyc    <- (cyc + E) % interval
+  * admit(msg_bytes): cost = msg_bytes (GBPS mode) or 1 (IOPS mode);
+      admitted iff tokens >= cost; on admit tokens -= cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODE_GBPS = 0
+MODE_IOPS = 1
+
+
+class TBState(NamedTuple):
+    """Vectorized bucket state + parameter 'registers' for N flows."""
+
+    tokens: jax.Array       # [N] int32 current tokens
+    cyc: jax.Array          # [N] int32 residual cycles since last refill
+    refill_rate: jax.Array  # [N] int32 tokens added per interval ("register")
+    bkt_size: jax.Array     # [N] int32 bucket capacity ("register")
+    interval: jax.Array     # [N] int32 cycles between refills ("register")
+    mode: jax.Array         # [N] int32 MODE_GBPS / MODE_IOPS
+
+
+def init(refill_rate, bkt_size, interval, mode, start_full: bool = True) -> TBState:
+    refill_rate = jnp.asarray(refill_rate, jnp.int32)
+    bkt_size = jnp.asarray(bkt_size, jnp.int32)
+    interval = jnp.asarray(interval, jnp.int32)
+    mode = jnp.asarray(mode, jnp.int32)
+    tokens = bkt_size if start_full else jnp.zeros_like(bkt_size)
+    return TBState(tokens, jnp.zeros_like(bkt_size), refill_rate, bkt_size,
+                   interval, mode)
+
+
+def advance(state: TBState, elapsed_cycles) -> TBState:
+    """Advance hardware timers by `elapsed_cycles`; perform due refills."""
+    e = jnp.asarray(elapsed_cycles, jnp.int32)
+    total = state.cyc + e
+    k = total // state.interval
+    cyc = total % state.interval
+    # Clamp the number of applied refills so k * refill_rate cannot overflow
+    # int32 even after long catch-up stalls: one bucket's worth of refills
+    # already saturates the bucket.
+    k = jnp.minimum(k, state.bkt_size // jnp.maximum(state.refill_rate, 1) + 1)
+    tok = jnp.minimum(state.tokens + k * state.refill_rate, state.bkt_size)
+    return state._replace(tokens=tok, cyc=cyc)
+
+
+def cost_of(state: TBState, msg_bytes) -> jax.Array:
+    msg_bytes = jnp.asarray(msg_bytes, jnp.int32)
+    return jnp.where(state.mode == MODE_GBPS, msg_bytes, 1).astype(jnp.int32)
+
+
+def try_admit(state: TBState, msg_bytes, want) -> tuple[TBState, jax.Array]:
+    """Attempt to admit one head-of-line message per flow.
+
+    want[N] bool: flow actually has a message to offer.
+    Returns (new_state, admitted[N] bool)."""
+    cost = cost_of(state, msg_bytes)
+    ok = jnp.logical_and(jnp.asarray(want, bool), state.tokens >= cost)
+    tok = jnp.where(ok, state.tokens - cost, state.tokens)
+    return state._replace(tokens=tok), ok
+
+
+def consume(state: TBState, amount) -> TBState:
+    """Unconditionally consume tokens (used after an arbiter grant)."""
+    return state._replace(tokens=state.tokens - jnp.asarray(amount, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Parameter planning (control plane; Arcus Table 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TBParams:
+    refill_rate: int
+    bkt_size: int
+    interval: int
+    mode: int = MODE_GBPS
+
+
+#: Arcus Table 2 — the paper's published parameter table for Gbps shaping at
+#: 250 MHz (tokens = bytes).  Kept verbatim for the reproduction benchmark.
+PAPER_TABLE2 = {
+    1: TBParams(refill_rate=1024, bkt_size=512, interval=1000),
+    10: TBParams(refill_rate=4096, bkt_size=4096, interval=800),
+    100: TBParams(refill_rate=16384, bkt_size=65536, interval=320),
+    1000: TBParams(refill_rate=32768, bkt_size=1048576, interval=64),
+}
+
+
+def params_for_gbps(slo_gbps: float, clock_hz: float = 250e6, *,
+                    bkt_size: int | None = None,
+                    max_interval: int = 1024) -> TBParams:
+    """Derive (Refill_Rate, Interval, Bkt_Size) for a Gbps SLO.
+
+    Follows the paper's recipe: fix Bkt_Size, then sweep Refill_Rate/Interval
+    so that refill_rate / (interval / clock) == target bytes/sec, preferring
+    the longest interval that keeps refill_rate in hardware range (the paper
+    notes even 1000 Gbps only needs a 64-cycle interval)."""
+    target_Bps = slo_gbps * 1e9 / 8.0
+    per_cycle = target_Bps / clock_hz  # bytes per cycle
+    best = None
+    for interval in range(max_interval, 0, -1):
+        refill = per_cycle * interval
+        if refill < 1:
+            continue
+        r = int(round(refill))
+        err = abs(r / interval - per_cycle) / per_cycle
+        if best is None or err < best[0] - 1e-12:
+            best = (err, r, interval)
+        if err == 0.0:
+            break
+    assert best is not None, "SLO too small for cycle-level shaping"
+    _, refill, interval = best
+    if bkt_size is None:
+        # Large-ish bucket: insensitive to bursts / size variation (paper §5.2)
+        bkt_size = int(max(512, min(1 << 20, 16 * refill)))
+    # invariant: a bucket smaller than one refill chunk clips the rate
+    bkt_size = max(bkt_size, refill)
+    return TBParams(refill, bkt_size, interval, MODE_GBPS)
+
+
+def params_for_iops(slo_iops: float, clock_hz: float = 250e6, *,
+                    burst: int = 64, max_interval: int = 1 << 28) -> TBParams:
+    """IOPS mode: tokens are messages.  interval = refill * clock / iops for
+    small refills, picking the pair with the least rate error."""
+    best = None
+    for refill in range(1, 65):
+        interval = int(round(refill * clock_hz / slo_iops))
+        if interval < 1 or interval > max_interval:
+            continue
+        err = abs(refill / interval * clock_hz - slo_iops) / slo_iops
+        if best is None or err < best[0] - 1e-12:
+            best = (err, refill, interval)
+        if err == 0.0:
+            break
+    assert best is not None, (slo_iops, clock_hz)
+    _, refill, interval = best
+    return TBParams(refill, max(burst, refill), interval, MODE_IOPS)
+
+
+def achieved_rate(params: TBParams, clock_hz: float = 250e6) -> float:
+    """Long-run shaped rate (bytes/s or msgs/s) implied by the registers."""
+    return params.refill_rate / params.interval * clock_hz
+
+
+def pack(params_list: list[TBParams], *, start_full: bool = True) -> TBState:
+    """Build a vectorized TBState from per-flow parameter plans."""
+    return init(
+        np.array([p.refill_rate for p in params_list], np.int32),
+        np.array([p.bkt_size for p in params_list], np.int32),
+        np.array([p.interval for p in params_list], np.int32),
+        np.array([p.mode for p in params_list], np.int32),
+        start_full=start_full,
+    )

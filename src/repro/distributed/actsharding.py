@@ -1,0 +1,53 @@
+"""Optional activation-sharding constraints (perf pass).
+
+XLA's SPMD propagation sometimes prefers all-reducing a multi-GB
+activation over all-gathering a few-MB weight shard (observed on llama4
+prefill: f32[1M, 8192] MLP hiddens all-reduced across "data", 128 GiB per
+layer, because the FSDP-sharded contracting dim conflicts with the
+batch-sharded output).  Layers consult this module and, when enabled,
+pin their hidden activations to P(batch_axes, ..., "model") so the
+partitioner gathers weights instead.
+
+Disabled by default so models stay mesh-agnostic (CPU tests run without
+any mesh).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"enabled": False, "dp": ("data",)}
+
+
+def enable(dp=("data",)) -> None:
+    _STATE["enabled"] = True
+    _STATE["dp"] = tuple(dp)
+
+
+def disable() -> None:
+    _STATE["enabled"] = False
+
+
+def constrain_hidden(h, *, batch_dims: int = 2, model_dim: bool = True):
+    """h [B, S, ..., F]: pin batch to dp axes and the trailing (FFN/head)
+    dim to "model"; middle dims replicated."""
+    if not _STATE["enabled"]:
+        return h
+    spec = [None] * h.ndim
+    spec[0] = _STATE["dp"]
+    if model_dim:
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(h, P(*spec))
+
+
+def gathered_weight(w, *, model_dim: int | None = -1):
+    """Pin a weight to its all-gathered form (FSDP dims replicated, TP dim
+    kept on "model") at the use site: a few-MB weight gather beats a
+    multi-GB activation all-reduce when the FSDP-sharded contracting dim
+    collides with the batch-sharded output."""
+    if not _STATE["enabled"]:
+        return w
+    spec = [None] * w.ndim
+    if model_dim is not None:
+        spec[model_dim] = "model"
+    return jax.lax.with_sharding_constraint(w, P(*spec))

@@ -1,0 +1,170 @@
+"""Sharding rules: logical param axes -> mesh axes.
+
+Every parameter leaf carries a tuple of logical axis names (see
+repro.models.module).  `param_shardings` resolves them to NamedShardings
+under a rules dict, *dropping* any assignment whose dimension is not
+divisible by the mesh axis size (e.g. seamless-m4t's vocab 256206 on a
+16-way model axis falls back to replication) — mixed-divisibility
+architectures therefore always lower.
+
+Default placement (single-pod mesh ("data", "model")):
+  * "embed" (d_model dims of weights)          -> "data"   (FSDP-style)
+  * "vocab" / "heads" / "mlp" / "head_dim"     -> "model"  (megatron TP)
+  * experts: llama4 (128) shards experts on "model"; mixtral (8 < 16)
+    shards the expert FFN dim instead (see rules_for_config).
+Multi-pod mesh ("pod", "data", "model"): weights are replicated across
+pods (pure data parallelism on the "pod" axis); the batch shards over
+("pod", "data").
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+BASE_RULES: dict[str, Any] = {
+    "embed": "data",
+    "vocab": "model",
+    "heads": "model",
+    "heads_flat": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "mlp2": None,
+    "gate": None,
+    "experts": "model",
+    "expert_mlp": None,
+    "conv": None,
+    "layers": None,
+    "frontend": None,
+}
+
+
+def rules_for_config(cfg: ArchConfig) -> dict[str, Any]:
+    rules = dict(BASE_RULES)
+    if cfg.n_experts:
+        # moe weights use ("experts", "embed", ..., "mlp"); pick the axis
+        # that divides: many-expert models shard experts, few-expert models
+        # shard the expert FFN dim (handled generically by the divisibility
+        # fallback, but made explicit here so both never collide on "model")
+        if cfg.n_experts >= 16:
+            rules["experts"] = "model"
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = "model"
+    return rules
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Mesh, rules: dict) -> P:
+    parts = []
+    for name, dim in zip(axes, shape):
+        ax = rules.get(name)
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None  # divisibility fallback -> replicate this dim
+        parts.append(ax)
+    return P(*parts)
+
+
+def param_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                    rules: dict) -> Any:
+    """axes_tree: twin tree of logical-axis tuples; shapes_tree: twin tree
+    of jax.ShapeDtypeStruct (or arrays)."""
+    def leaf(axes, arr):
+        return NamedSharding(mesh, spec_for(axes, arr.shape, mesh, rules))
+    return jax.tree.map(leaf, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the global batch."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_spec(mesh: Mesh, ndim: int, batch: int | None = None) -> P:
+    """[B, ...] arrays: batch over (pod, data); replicated if indivisible
+    (e.g. long_500k's global_batch=1)."""
+    axes = batch_axes(mesh)
+    if batch is not None:
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if batch % n != 0:
+            return P(*([None] * ndim))
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def cache_spec(mesh: Mesh, path_keys: tuple[str, ...], shape: tuple,
+               cfg: ArchConfig, *, stacked: bool,
+               seq_axis: str | None = None) -> P:
+    """Sharding for one serving-cache leaf, identified by its dict key.
+
+    KV caches [.., B, S, KvH, Dh]: default — batch over (pod,data),
+    kv-heads over "model" when divisible else head_dim over "model".
+    seq_axis = "data": long-context (batch=1) shards S over data.
+    seq_axis = "model": perf variant — S over model, batch over data
+    (pairs with distributed partial-softmax decode attention).
+    States: batch over (pod,data); wide dims over "model" when divisible.
+    """
+    name = path_keys[-1]
+    lead = (None,) if stacked else ()
+    dp = batch_axes(mesh)
+    model_n = mesh.shape["model"]
+    no_batch = seq_axis == "data"   # batch=1 long-context regime
+    if name in ("k", "v", "xk", "xv"):
+        B, S, KvH, Dh = shape[-4:]
+        if seq_axis and S % mesh.shape[seq_axis] == 0:
+            b_ax = None if no_batch else dp
+            hd_ax = "model" if (seq_axis != "model"
+                                and Dh % model_n == 0) else None
+            return P(*lead, b_ax, seq_axis, None, hd_ax)
+        kv_ax = "model" if KvH % model_n == 0 else None
+        hd_ax = None if kv_ax else ("model" if Dh % model_n == 0 else None)
+        return P(*lead, None if no_batch else dp, None, kv_ax, hd_ax)
+    if name == "state":   # ssd state [.., B, H, P, N]
+        H = shape[-3]
+        h_ax = "model" if H % model_n == 0 else None
+        return P(*lead, None if no_batch else dp, h_ax, None, None)
+    if name == "h":       # rglru hidden [.., B, W]
+        W = shape[-1]
+        return P(*lead, None if no_batch else dp,
+                 "model" if W % model_n == 0 else None)
+    if name == "conv":    # conv state [.., B, K-1, W]
+        W = shape[-1]
+        return P(*lead, None if no_batch else dp, None,
+                 "model" if W % model_n == 0 else None)
+    return P(*lead, *([None] * (len(shape) - len(lead))))
+
+
+def cache_shardings(cache_tree, mesh: Mesh, cfg: ArchConfig, *,
+                    seq_shard: bool = False, seq_axis: str | None = None):
+    """Build NamedShardings for a serving cache pytree (as produced by
+    transformer.init_cache): 'blocks' leaves are stacked [reps, B, ...],
+    'tail' leaves are [B, ...].  seq_shard=True is shorthand for
+    seq_axis="data" (long-context)."""
+    if seq_shard and seq_axis is None:
+        seq_axis = "data"
+
+    def walk(node, keys, stacked):
+        if isinstance(node, dict):
+            return {k: walk(v, keys + (k,),
+                            stacked if k not in ("blocks", "tail")
+                            else (k == "blocks"))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, keys + (str(i),), False)
+                    for i, v in enumerate(node)]
+        spec = cache_spec(mesh, keys, node.shape, cfg, stacked=stacked,
+                          seq_axis=seq_axis)
+        return NamedSharding(mesh, spec)
+    return walk(cache_tree, (), False)

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the perf-critical compute layers, each validated
+# in interpret=True mode against its pure-jnp ref.py oracle:
+#   token_bucket/     — the paper's hardware rate limiter, vectorized over
+#                       flows (the Arcus offloaded mechanism, TPU-native)
+#   decode_attention/ — GQA flash decode (one token vs a long KV cache)
+#   flash_prefill/    — causal GQA flash attention for prefill/train
+#                       (sliding-window + chunked-local masks, block-level
+#                       short-circuit)
+#   ssd_scan/         — Mamba2 SSD chunked scan (MXU-friendly chunk duality)

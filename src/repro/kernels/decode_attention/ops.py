@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the decode-attention Pallas kernel.
+
+Handles GQA head grouping and TPU tile padding:
+  * q [B, H, D] is regrouped to [B, KvH, G, D]; G padded to a multiple of 8,
+  * D padded to a multiple of 128,
+  * S padded to a multiple of the S block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_grouped
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_block", "interpret"))
+def decode_attention(q, k, v, lengths, *, window: int = 0,
+                     s_block: int = 512, interpret: bool = True):
+    """q [B, H, D]; k, v [B, S, KvH, D]; lengths [B] -> [B, H, D]."""
+    B, H, D = q.shape
+    S, KvH = k.shape[1], k.shape[2]
+    assert H % KvH == 0
+    G = H // KvH
+    scale = D ** -0.5  # scale on the true head dim, not the padded one
+
+    Gp = _round_up(max(G, 8), 8)
+    Dp = _round_up(D, 128)
+    s_block = min(s_block, _round_up(S, 128))
+    Sp = _round_up(S, s_block)
+
+    qg = q.reshape(B, KvH, G, D)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, Dp - D)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, Dp - D)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, Dp - D)))
+
+    out = decode_attention_grouped(qg, kp, vp, lengths, s_block=s_block,
+                                   window=window, scale=scale,
+                                   interpret=interpret)
+    return out[:, :, :G, :D].reshape(B, H, D)

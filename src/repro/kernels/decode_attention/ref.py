@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for GQA decode attention (one new token vs. a KV cache).
+
+Shapes:
+  q        [B, H, D]        — one query token per sequence
+  k, v     [B, S, KvH, D]   — KV cache (padded to S)
+  lengths  [B] int32        — valid cache length per sequence
+  window   int              — 0 = full attention; w > 0 = sliding window
+                              (attend to positions [len-w, len))
+Returns [B, H, D].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, lengths, *, window: int = 0,
+                     scale: float | None = None):
+    B, H, D = q.shape
+    S, KvH = k.shape[1], k.shape[2]
+    G = H // KvH
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, KvH, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bngd,bsnd->bngs", qg, kf) * scale
+    idx = jnp.arange(S)[None, :]                      # [1, S]
+    ln = lengths[:, None]                             # [B, 1]
+    valid = idx < ln
+    if window > 0:
+        valid = jnp.logical_and(valid, idx >= ln - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = jnp.where(jnp.isfinite(scores), probs, 0.0)
+    denom = jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bngs,bsnd->bngd", probs / denom, vf)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Jitted public wrapper for the flash-prefill Pallas kernel.
+
+GQA head matching (each query head streams against its KV group's cache),
+plus TPU tile padding: Sq/Sk to block multiples, D to 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill.kernel import flash_prefill_flat
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("window", "chunk_size",
+                                             "causal", "bq", "bk",
+                                             "interpret"))
+def flash_prefill(q, k, v, *, window: int = 0, chunk_size: int = 0,
+                  causal: bool = True, bq: int = 128, bk: int = 128,
+                  interpret: bool = True):
+    """q [B, Sq, H, D]; k, v [B, Sk, KvH, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    Sk, KvH = k.shape[1], k.shape[2]
+    assert H % KvH == 0
+    G = H // KvH
+    scale = D ** -0.5
+
+    bq = min(bq, _round_up(Sq, 8))
+    bk = min(bk, _round_up(Sk, 8))
+    Sqp, Skp, Dp = _round_up(Sq, bq), _round_up(Sk, bk), _round_up(D, 128)
+
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, Dp - D)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, Dp - D)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, Dp - D)))
+
+    # flatten: query stream n = (b, kvh, g); its KV stream is (b, kvh).
+    # qp transpose gives (b, h) order = (b, kvh, g) because heads are laid
+    # out kv-major in the model (h = kvh * G + g)
+    qf = qp.transpose(0, 2, 1, 3).reshape(B * H, Sqp, Dp)
+    kf = jnp.repeat(kp.transpose(0, 2, 1, 3), G, axis=1) \
+        .reshape(B * H, Skp, Dp)
+    vf = jnp.repeat(vp.transpose(0, 2, 1, 3), G, axis=1) \
+        .reshape(B * H, Skp, Dp)
+
+    out = flash_prefill_flat(qf, kf, vf, bq=bq, bk=bk, window=window,
+                             chunk_size=chunk_size, scale=scale,
+                             causal=causal, interpret=interpret)
+    out = out.reshape(B, H, Sqp, Dp).transpose(0, 2, 1, 3)
+    return out[:, :Sq, :, :D]
+
+
+# padded KV columns are only excluded by the causal mask; non-causal use
+# requires exact tiling (encoder paths use the jnp flash implementation)

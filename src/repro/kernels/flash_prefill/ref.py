@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-prefill kernel: naive masked softmax
+attention (materializes [Sq, Sk] — test sizes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill(q, k, v, *, window: int = 0, chunk_size: int = 0,
+                  causal: bool = True):
+    """q [B, Sq, H, D]; k, v [B, Sk, KvH, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    Sk, KvH = k.shape[1], k.shape[2]
+    G = H // KvH
+    qg = q.reshape(B, Sq, KvH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqnhd,bknd->bqnhk", qg,
+                   k.astype(jnp.float32)) * D ** -0.5
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+        if window > 0:
+            mask &= qi - ki < window
+        if chunk_size > 0:
+            mask &= (qi // chunk_size) == (ki // chunk_size)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bqnhk,bknd->bqnhd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

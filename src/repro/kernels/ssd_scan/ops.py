@@ -1,0 +1,35 @@
+"""Jitted public wrapper for the SSD-scan Pallas kernel.
+
+Broadcasts the G state groups to H heads, pads L to a chunk multiple with
+neutral elements (a=1, x=0 — keeps the carried state intact), dispatches,
+and unpads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_headmajor
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, a, B, C, *, chunk: int = 128, interpret: bool = True):
+    """x [Bsz,L,H,P]; a [Bsz,L,H]; B, C [Bsz,L,G,N] ->
+    (y [Bsz,L,H,P], final_state [Bsz,H,P,N])."""
+    Bsz, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    head_group = (jnp.arange(H) * G) // H
+    Bh = B[:, :, head_group]
+    Ch = C[:, :, head_group]
+    chunk = min(chunk, max(8, 1 << (L - 1).bit_length()))
+    Lp = -(-L // chunk) * chunk
+    if Lp != L:
+        pad = ((0, 0), (0, Lp - L), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        Bh = jnp.pad(Bh, pad)
+        Ch = jnp.pad(Ch, pad)
+        a = jnp.pad(a, ((0, 0), (0, Lp - L), (0, 0)), constant_values=1.0)
+    y, s = ssd_scan_headmajor(x, a, Bh, Ch, chunk=chunk, interpret=interpret)
+    return y[:, :L], s

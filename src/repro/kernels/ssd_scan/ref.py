@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Discrete-time selective-SSM recurrence, per batch b and head h
+(group g = h * G // H):
+
+    S_t = a[t,h] * S_{t-1} + B[t,g,:] (outer) x[t,h,:]     S in R^{P x N}
+    y[t,h,:] = S_t @ C[t,g,:]
+
+Inputs:
+  x [B, L, H, P]   (Delta-scaled inputs)
+  a [B, L, H]      decay factors in (0, 1] (= exp(Delta * A))
+  B [B, L, G, N], C [B, L, G, N]
+Returns (y [B, L, H, P], final_state [B, H, P, N]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan(x, a, B, C):
+    Bsz, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    head_group = (jnp.arange(H) * G) // H
+
+    Bh = B[:, :, head_group]          # [B, L, H, N]
+    Ch = C[:, :, head_group]          # [B, L, H, N]
+
+    def step(S, inp):
+        xt, at, Bt, Ct = inp           # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        S = S * at[..., None, None] + xt[..., :, None] * Bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", S, Ct)
+        return S, y
+
+    S0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Ch, 1, 0).astype(jnp.float32))
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, S
+
+
+def ssd_decode_step(state, x_t, a_t, B_t, C_t):
+    """Single-token recurrence for serving decode.
+
+    state [B, H, P, N]; x_t [B, H, P]; a_t [B, H]; B_t/C_t [B, G, N]."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    head_group = (jnp.arange(H) * G) // H
+    Bh = B_t[:, head_group]
+    Ch = C_t[:, head_group]
+    state = state * a_t[..., None, None] + \
+        x_t[..., :, None] * Bh[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return state, y.astype(x_t.dtype)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: vectorized per-flow token-bucket update + admission.
+
+This is the TPU-native analogue of Arcus's offloaded hardware rate limiter
+(Sec. 4.2): shaping state lives on-device and one kernel invocation advances
+*all* per-flow buckets by one shaping interval and decides admissions —
+no host round-trip, no CPU interference, exactly like the paper's FPGA
+mechanism runs off the host critical path.
+
+Layout: flows are padded to R rows x 128 lanes (int32).  The grid tiles rows
+in blocks of 8 (native (8, 128) int32 VMEM tiles); all state arrays share one
+BlockSpec so a block holds 1024 flows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+LANES = 128
+FLOWS_PER_BLOCK = ROW_BLOCK * LANES
+
+
+def _tb_kernel(elapsed_ref, tokens_ref, cyc_ref, refill_ref, bkt_ref,
+               interval_ref, mode_ref, cost_ref, want_ref,
+               out_tokens_ref, out_cyc_ref, admit_ref):
+    """One (8, 128) block of flows: refill timers, then admission."""
+    elapsed = elapsed_ref[0]                      # scalar int32 (SMEM)
+    tokens = tokens_ref[...]
+    cyc = cyc_ref[...]
+    refill = refill_ref[...]
+    bkt = bkt_ref[...]
+    interval = interval_ref[...]
+    mode = mode_ref[...]
+
+    # --- hardware timers: catch-up refills -----------------------------
+    total = cyc + elapsed
+    k = total // interval
+    new_cyc = total % interval
+    # clamp k so k * refill cannot overflow int32 after long stalls
+    k = jnp.minimum(k, bkt // jnp.maximum(refill, 1) + 1)
+    tokens = jnp.minimum(tokens + k * refill, bkt)
+
+    # --- admission ------------------------------------------------------
+    cost = jnp.where(mode == 0, cost_ref[...], 1)  # GBPS: bytes, IOPS: msgs
+    want = want_ref[...] != 0
+    ok = jnp.logical_and(want, tokens >= cost)
+    tokens = jnp.where(ok, tokens - cost, tokens)
+
+    out_tokens_ref[...] = tokens
+    out_cyc_ref[...] = new_cyc
+    admit_ref[...] = ok.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def token_bucket_step_2d(elapsed, tokens, cyc, refill, bkt, interval, mode,
+                         cost, want, *, interpret: bool = True):
+    """All inputs [R, 128] int32 with R % 8 == 0; elapsed scalar int32."""
+    R = tokens.shape[0]
+    assert R % ROW_BLOCK == 0 and tokens.shape[1] == LANES
+    grid = (R // ROW_BLOCK,)
+    block = pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((R, LANES), jnp.int32)] * 3
+    return pl.pallas_call(
+        _tb_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))] + [block] * 8,
+        out_specs=[block] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray([elapsed], jnp.int32), tokens, cyc, refill, bkt, interval,
+      mode, cost, want)

@@ -1,0 +1,44 @@
+"""Jitted public wrapper for the token-bucket Pallas kernel.
+
+Accepts flat [N] flow-state arrays (any N), pads to the kernel's
+R x 128 tiling, dispatches, and unpads.  `interpret=True` executes the
+kernel body on CPU for validation; on a real TPU backend pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.token_bucket import TBState
+from repro.kernels.token_bucket.kernel import (FLOWS_PER_BLOCK, LANES,
+                                               token_bucket_step_2d)
+
+
+def _pad2d(x: jax.Array, n_pad: int) -> jax.Array:
+    x = jnp.pad(x.astype(jnp.int32), (0, n_pad - x.shape[0]))
+    return x.reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def token_bucket_step(state: TBState, elapsed_cycles, msg_cost, want,
+                      *, interpret: bool = True
+                      ) -> tuple[TBState, jax.Array]:
+    """Advance all buckets one shaping interval and admit head messages.
+
+    Drop-in replacement for (tb.advance + tb.try_admit); same semantics,
+    executed as a single fused on-device kernel."""
+    n = state.tokens.shape[0]
+    n_pad = -(-n // FLOWS_PER_BLOCK) * FLOWS_PER_BLOCK
+    args = [_pad2d(a, n_pad) for a in
+            (state.tokens, state.cyc, state.refill_rate, state.bkt_size,
+             jnp.maximum(state.interval, 1), state.mode,
+             jnp.asarray(msg_cost), jnp.asarray(want).astype(jnp.int32))]
+    tokens, cyc, admit = token_bucket_step_2d(
+        jnp.asarray(elapsed_cycles, jnp.int32), *args, interpret=interpret)
+    tokens = tokens.reshape(-1)[:n]
+    cyc = cyc.reshape(-1)[:n]
+    admit = admit.reshape(-1)[:n].astype(bool)
+    return state._replace(tokens=tokens, cyc=cyc), admit

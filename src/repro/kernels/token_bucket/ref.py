@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the token-bucket kernel.
+
+Delegates to `repro.core.token_bucket` — the simulator's reference
+semantics — so the kernel, the simulator, and the serving scheduler all
+share one definition of the mechanism.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import token_bucket as tb
+
+
+def token_bucket_step(tokens, cyc, refill_rate, bkt_size, interval, mode,
+                      elapsed_cycles, msg_cost_bytes, want):
+    """One shaping interval for N flows (any shape; elementwise).
+
+    Returns (new_tokens, new_cyc, admitted)."""
+    state = tb.TBState(tokens, cyc, refill_rate, bkt_size, interval, mode)
+    state = tb.advance(state, elapsed_cycles)
+    state, admitted = tb.try_admit(state, msg_cost_bytes, want)
+    return state.tokens, state.cyc, admitted

@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init).  For every combination this script:
+
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. constructs the step function for the shape's mode
+     (train_4k -> train_step; prefill_32k -> prefill; decode shapes ->
+     serve_step = one-token decode against a seq_len KV cache),
+  3. jit-lowers with explicit in/out shardings over ShapeDtypeStruct
+     stand-ins (no allocation),
+  4. compiles, prints memory_analysis() / cost_analysis(), parses the
+     post-SPMD HLO for collective bytes, and
+  5. writes benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json
+     (consumed by the roofline report).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (ARCH_IDS, SHAPES, get_config,
+                                    shape_supported)
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.training import optimizer as opt, train as TR
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    specs: dict = {}
+    if sh["mode"] == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["mask"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.frontend:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+    elif sh["mode"] == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.frontend:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+    else:  # decode: ONE new token against a seq_len cache
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        specs["lengths"] = jax.ShapeDtypeStruct((B,), i32)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# Lowering for each mode
+# ---------------------------------------------------------------------------
+
+
+def build_lowered(cfg: ArchConfig, shape_name: str, mesh, *,
+                  param_dtype=jnp.bfloat16, unroll: int = 1,
+                  attn_impl: str = "auto", act_sharding: bool = False):
+    """Returns lowered jit artifact.
+
+    unroll > 1 inlines the layer scan (unroll=reps removes the while loop)
+    so cost_analysis counts per-layer FLOPs/collectives correctly — XLA's
+    HLO cost analysis counts a while body once, not x trip-count.
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    rules = SH.rules_for_config(cfg)
+    if "pod" in mesh.axis_names:
+        rules = dict(rules)
+        rules["embed"] = ("pod", "data")  # FSDP spans pods
+    from repro.distributed import actsharding
+    if act_sharding:
+        actsharding.enable(SH.batch_axes(mesh))
+    else:
+        actsharding.disable()
+
+    # axes tree comes from a real (host-level, cheap) structure pass
+    axes = T.init_model_axes(cfg)
+    pshapes = jax.eval_shape(
+        lambda: T.init_model_params_only(0, cfg, dtype=param_dtype))
+    pshard = SH.param_shardings(axes, pshapes, mesh, rules)
+    dspec = lambda nd: NamedSharding(mesh, SH.data_spec(mesh, nd, batch=B))
+    specs = input_specs(cfg, shape_name)
+
+    if sh["mode"] == "train":
+        ocfg = opt.AdamWConfig()
+        step = TR.make_train_step(cfg, ocfg, remat=True, unroll=unroll)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        oshard = opt.OptState(
+            NamedSharding(mesh, P()),
+            jax.tree.map(lambda s: s, pshard),
+            jax.tree.map(lambda s: s, pshard))
+        batch_sh = {"tokens": dspec(2), "mask": dspec(2)}
+        if cfg.frontend:
+            batch_sh["frontend"] = dspec(3)
+        batch_specs = {k: v for k, v in specs.items()}
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, batch_sh),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(pshapes, oshapes, batch_specs)
+    elif sh["mode"] == "prefill":
+        cspecs = cache_specs(cfg, B, S)
+        cshard = SH.cache_shardings(cspecs, mesh, cfg)
+
+        def prefill_fn(params, tokens, cache, frontend=None):
+            return T.prefill(params, cfg, tokens, cache, frontend,
+                             unroll=unroll)
+
+        args = [pshapes, specs["tokens"], cspecs]
+        in_sh = [pshard, dspec(2), cshard]
+        if cfg.frontend:
+            args.append(specs["frontend"])
+            in_sh.append(dspec(3))
+        fn = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                     out_shardings=(None, cshard, None),
+                     donate_argnums=(2,))
+        lowered = fn.lower(*args)
+    else:  # decode
+        seq_shard = shape_name == "long_500k"
+        cspecs = cache_specs(cfg, B, S)
+        cshard = SH.cache_shardings(cspecs, mesh, cfg, seq_shard=seq_shard)
+
+        decode_attn_fn = decode_update_fn = None
+        if attn_impl == "seq_sharded":
+            # beyond-paper perf variant: KV sequence sharded over "data"
+            # (long_500k, batch=1) or "model" (decode_32k) with explicit
+            # partial-softmax combine + owned-shard cache writes
+            from repro.distributed.collectives import (
+                make_seq_sharded_cache_update, make_seq_sharded_decode_attn)
+            axis = "data" if seq_shard else "model"
+            b_ax = None if seq_shard else "data"
+            d_ax = "model" if seq_shard else None
+            decode_attn_fn = make_seq_sharded_decode_attn(mesh, axis, b_ax,
+                                                          d_ax)
+            decode_update_fn = make_seq_sharded_cache_update(mesh, axis,
+                                                             b_ax, d_ax)
+            cshard = SH.cache_shardings(cspecs, mesh, cfg, seq_axis=axis)
+
+        def decode_fn(params, tokens, lengths, cache):
+            return T.decode_step(params, cfg, tokens, lengths, cache,
+                                 unroll=unroll,
+                                 decode_attn_fn=decode_attn_fn,
+                                 decode_update_fn=decode_update_fn)
+
+        fn = jax.jit(decode_fn,
+                     in_shardings=(pshard, dspec(2),
+                                   NamedSharding(mesh, P()), cshard),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(3,))
+        lowered = fn.lower(pshapes, specs["tokens"], specs["lengths"],
+                           cspecs)
+    return lowered
+
+
+# ---------------------------------------------------------------------------
+# Analysis
+# ---------------------------------------------------------------------------
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-tensor bytes of every collective op in post-SPMD HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        m = shape_re.search(ls)
+        if m is None:
+            continue
+        op = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in ls or f"{c}-start(" in ls or \
+               f" {c}-start(" in ls or ls.startswith(c):
+                op = c
+                break
+        if op is None:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] += n * nbytes
+        counts[op] += 1
+    out_counts = {f"n_{k}": counts[k] for k in counts}
+    return {**out, **out_counts}
+
+
+def analyze(lowered, compiled, *, parse_hlo: bool = True) -> dict:
+    res: dict = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                res[f] = int(v)
+    except Exception as e:  # pragma: no cover - backend dependent
+        res["memory_analysis_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        res["flops"] = float(ca.get("flops", -1))
+        res["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+        res["optimal_seconds"] = float(ca.get("optimal_seconds", -1))
+    except Exception as e:  # pragma: no cover
+        res["cost_analysis_error"] = str(e)
+    if parse_hlo:
+        try:
+            res["collectives"] = parse_collective_bytes(
+                compiled.as_text())
+        except Exception as e:  # pragma: no cover
+            res["collectives_error"] = str(e)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            out_dir: str = RESULTS_DIR, force: bool = False,
+            parse_hlo: bool = True, unrolled_pass: bool = False,
+            variant: str = "", build_kwargs: dict | None = None,
+            mesh_shape: tuple | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    if variant:
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "skipped"}
+    if not shape_supported(arch, shape_name):
+        rec["reason"] = "full-attention arch: long_500k skipped (DESIGN.md)"
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"),
+                                shape=mesh_shape)
+    t0 = time.time()
+    bk = build_kwargs or {}
+    try:
+        with mesh:
+            lowered = build_lowered(cfg, shape_name, mesh, **bk)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            rec.update(analyze(lowered, compiled, parse_hlo=parse_hlo))
+            rec.update(status="ok", lower_s=round(t_lower, 1),
+                       compile_s=round(t_compile, 1),
+                       n_devices=mesh.size)
+            if unrolled_pass and SHAPES[shape_name]["mode"] == "train":
+                # unrolled backward graphs take tens of minutes to compile
+                # on one CPU core; train_4k and prefill_32k carry the SAME
+                # token count (256x4096 == 32x32768), so the roofline
+                # derives train FLOPs as 4x the prefill-unrolled count
+                # (fwd + bwd(2x) + remat fwd).  Marked for transparency.
+                rec["unrolled"] = {"derive": "4x_prefill", "approx": True,
+                                   "reps": cfg.n_layers // cfg.period}
+            elif unrolled_pass:
+                reps = cfg.n_layers // cfg.period
+                try:
+                    lo_u = build_lowered(cfg, shape_name, mesh, unroll=reps,
+                                         **bk)
+                    co_u = lo_u.compile()
+                    rec["unrolled"] = analyze(lo_u, co_u,
+                                              parse_hlo=parse_hlo)
+                    rec["unrolled"]["reps"] = reps
+                except Exception as e:  # fallback: x reps correction
+                    rec["unrolled_error"] = f"{type(e).__name__}: {e}"
+                    rec["unrolled"] = {"flops": rec.get("flops", 0) * reps,
+                                       "approx": True, "reps": reps}
+            print(f"[dryrun] {tag}: OK lower={t_lower:.0f}s "
+                  f"compile={t_compile:.0f}s flops={rec.get('flops'):.3g}")
+            print(f"[dryrun] {tag} memory: "
+                  f"args={rec.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"out={rec.get('output_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {tag}: FAILED {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip collective parsing (faster)")
+    ap.add_argument("--unrolled", action="store_true",
+                    help="extra unrolled lowering for exact FLOP counts")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                for m in meshes:
+                    combos.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape, m) for m in meshes]
+    ok = err = skip = 0
+    for a, s, m in combos:
+        rec = run_one(a, s, m, out_dir=args.out, force=args.force,
+                      parse_hlo=not args.no_hlo,
+                      unrolled_pass=args.unrolled)
+        ok += rec["status"] == "ok"
+        err += rec["status"] == "error"
+        skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {ok} ok, {err} failed, {skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  Single pod = 256 v5e chips as
+(data=16, model=16); two pods = 512 chips as (pod=2, data=16, model=16).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple | None = None):
+    """Default 16x16 per pod; `shape` re-factors the same chips (e.g.
+    (32, 8) so a 40-head model's heads divide the model axis)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    assert len(shape) == len(axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh for CPU tests (uses however many devices exist)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

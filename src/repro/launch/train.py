@@ -1,0 +1,84 @@
+"""Training launcher.
+
+Dev mode (default, CPU): trains a reduced variant of the selected arch on
+the synthetic pipeline with the same step function the dry run lowers at
+pod scale.
+
+Production mode (--production, requires a real 256/512-chip platform):
+builds the production mesh, shards params/optimizer with the same rules as
+the dry run, and runs the pjit'd step.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced_config
+from repro.data.pipeline import DataConfig, SyntheticLM, frontend_stub
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_dev_mesh, make_production_mesh
+from repro.models import module as nn, transformer as T
+from repro.training import checkpoint as ckpt, optimizer as opt, train as TR
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-14b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--production", action="store_true",
+                    help="full config on the production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    if args.production:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        cfg = get_reduced_config(args.arch)
+        mesh = make_dev_mesh(1, 1)
+
+    rules = SH.rules_for_config(cfg)
+    axes = T.init_model_axes(cfg)
+    ocfg = opt.AdamWConfig(lr=3e-4, warmup_steps=10, total_steps=args.steps)
+    step = TR.make_train_step(cfg, ocfg, remat=args.production)
+
+    with mesh:
+        pshapes = jax.eval_shape(lambda: T.init_model(0, cfg)[0])
+        pshard = SH.param_shardings(axes, pshapes, mesh, rules)
+        params = jax.jit(lambda: T.init_model(0, cfg)[0],
+                         out_shardings=pshard)()
+        print(f"{cfg.name}: {nn.param_count(params)/1e6:.1f}M params, "
+              f"mesh={dict(mesh.shape)}")
+        ost = opt.init(params)
+        dspec = NamedSharding(mesh, SH.data_spec(mesh, 2, batch=args.batch))
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                      global_batch=args.batch))
+        t0 = time.time()
+        for i, b in zip(range(args.steps), data.batches()):
+            batch = {"tokens": jax.device_put(b["tokens"], dspec),
+                     "mask": jax.device_put(b["mask"], dspec)}
+            if cfg.frontend:
+                batch["frontend"] = jnp.asarray(frontend_stub(
+                    cfg.frontend, args.batch, cfg.frontend_len,
+                    cfg.frontend_dim))
+            params, ost, m = jstep(params, ost, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.ckpt:
+        ckpt.save(args.ckpt, params, ost, step=args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

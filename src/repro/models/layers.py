@@ -1,0 +1,473 @@
+"""Shared neural layers for all assigned architectures.
+
+Everything is a pure function over (params dict, inputs); parameter
+construction lives beside each forward function and returns (params, axes)
+twin trees for sharding.
+
+Attention is flash-style (lax.scan over KV chunks with online softmax) so
+prefill_32k / train_4k never materialize [S, S] score matrices.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+from repro.models.config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig):
+    c = nn.ParamCollector()
+    c.add("scale", nn.ones((cfg.d_model,), ("embed",)))
+    if cfg.norm == "layernorm":
+        c.add("bias", nn.zeros((cfg.d_model,), ("embed",)))
+    return c.params, c.axes
+
+
+def norm(p, x, cfg: ArchConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"] + p["bias"]
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full / partial-dim "2d" variant)
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, *, theta: float, fraction: float = 1.0):
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    D = x.shape[-1]
+    rot = int(D * fraction) // 2 * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # [...,S,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([xr.astype(x.dtype), xp], -1)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (jnp; chunked over KV with online softmax)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, mask_kind: str = "causal", window: int = 0,
+                    q_offset=0, kv_len=None, kv_chunk: int = 512,
+                    chunk_size: int = 0):
+    """q [B, Sq, H, D]; k, v [B, Sk, KvH, D] -> [B, Sq, H, D].
+
+    mask_kind: "causal" | "full" (encoder / cross)
+    window: >0 restricts to the last `window` positions (sliding window,
+            with mask_kind="causal"); chunk_size >0 = llama4-style chunked
+            local attention (tokens attend within their chunk only).
+    q_offset: absolute position of q[0] (scalar or [B]).
+    kv_len:   [B] valid KV length (None = all valid).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KvH = k.shape[1], k.shape[2]
+    G = H // KvH
+    scale = D ** -0.5
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = -(-Sk // kv_chunk)
+    Skp = n_chunks * kv_chunk
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+
+    qf = q.reshape(B, Sq, KvH, G, D).astype(jnp.float32) * scale
+    q_pos = (jnp.asarray(q_offset).reshape(-1, 1)
+             + jnp.arange(Sq)[None, :])                     # [B|1, Sq]
+    valid_len = (jnp.full((B,), Sk) if kv_len is None
+                 else jnp.asarray(kv_len)).reshape(B, 1)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, KvH, D)
+    vc = v.reshape(B, n_chunks, kv_chunk, KvH, D)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb, vb, ci = inp                                     # [B,ck,KvH,D]
+        kb = kb.astype(jnp.float32)
+        s = jnp.einsum("bqnhd,bknd->bqnhk", qf, kb)         # [B,Sq,KvH,G,ck]
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)        # [ck]
+        ok = kv_pos[None, :] < valid_len                     # [B, ck]
+        if mask_kind == "causal":
+            cm = q_pos[:, :, None] >= kv_pos[None, None, :]  # [B,Sq,ck]
+            if window > 0:
+                cm &= q_pos[:, :, None] - kv_pos[None, None, :] < window
+            if chunk_size > 0:
+                cm &= (q_pos[:, :, None] // chunk_size) == \
+                      (kv_pos[None, None, :] // chunk_size)
+            ok = ok[:, None, :] & cm                         # [B,Sq,ck]
+        else:
+            ok = jnp.broadcast_to(ok[:, None, :], (B, Sq, kv_chunk))
+        s = jnp.where(ok[:, :, None, None, :], s, -1e30)
+        m_cur = jnp.maximum(m_prev, s.max(-1))               # [B,Sq,KvH,G]
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        p = jnp.where(ok[:, :, None, None, :], p, 0.0)
+        l_cur = l_prev * alpha + p.sum(-1)
+        pv = jnp.einsum("bqnhk,bknd->bqnhd", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((B, Sq, KvH, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KvH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KvH, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA; global / local / chunk / cross)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: nn.KeyGen, cfg: ArchConfig, *, cross: bool = False):
+    c = nn.ParamCollector()
+    E, H, KvH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    del cross  # frontend embeddings are projected to d_model upstream
+    c.add("wq", nn.dense(key(), E, (H, Dh), ("embed", "heads", "head_dim")))
+    c.add("wk", nn.dense(key(), E, (KvH, Dh),
+                         ("embed", "kv_heads", "head_dim")))
+    c.add("wv", nn.dense(key(), E, (KvH, Dh),
+                         ("embed", "kv_heads", "head_dim")))
+    c.add("wo", nn.dense(key(), H * Dh, E, ("heads_flat", "embed"),
+                         scale=1.0 / math.sqrt(H * Dh)))
+    if cfg.qkv_bias:
+        c.add("bq", nn.zeros((H, Dh), ("heads", "head_dim")))
+        c.add("bk", nn.zeros((KvH, Dh), ("kv_heads", "head_dim")))
+        c.add("bv", nn.zeros((KvH, Dh), ("kv_heads", "head_dim")))
+    return c.params, c.axes
+
+
+def attention_qkv(p, x, cfg: ArchConfig, kv_src=None):
+    """Project to q [B,S,H,D], k/v [B,Skv,KvH,D]."""
+    dt = x.dtype
+    kv_src = x if kv_src is None else kv_src
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    k = jnp.einsum("bse,ehd->bshd", kv_src, p["wk"].astype(kv_src.dtype))
+    v = jnp.einsum("bse,ehd->bshd", kv_src, p["wv"].astype(kv_src.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(kv_src.dtype)
+        v = v + p["bv"].astype(kv_src.dtype)
+    return q, k, v
+
+
+def attention_out(p, o, cfg: ArchConfig):
+    B, S, H, Dh = o.shape
+    return jnp.einsum("bsf,fe->bse", o.reshape(B, S, H * Dh),
+                      p["wo"].astype(o.dtype))
+
+
+def attention_block(p, x, cfg: ArchConfig, kind: str, *, positions,
+                    frontend_kv=None, kv_chunk: int = 512):
+    """Full-sequence attention (train / prefill)."""
+    if kind == "cross":
+        # no RoPE across modalities: q/kv have no shared position geometry
+        q, k, v = attention_qkv(p, x, cfg, kv_src=frontend_kv)
+        o = flash_attention(q, k, v, mask_kind="full", kv_chunk=kv_chunk)
+    else:
+        q, k, v = attention_qkv(p, x, cfg)
+        q = rope(q, positions, theta=cfg.rope_theta,
+                 fraction=cfg.rope_fraction)
+        k = rope(k, positions, theta=cfg.rope_theta,
+                 fraction=cfg.rope_fraction)
+        window = cfg.window if kind == "local" else 0
+        chunk = cfg.window if kind == "chunk" else 0
+        mask = "full" if kind == "encoder" else "causal"
+        o = flash_attention(q, k, v, mask_kind=mask, window=window,
+                            chunk_size=chunk, q_offset=positions[..., 0],
+                            kv_chunk=kv_chunk)
+    return attention_out(p, o, cfg)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: nn.KeyGen, cfg: ArchConfig):
+    c = nn.ParamCollector()
+    E, F = cfg.d_model, cfg.d_ff
+    g = 2 if cfg.gated_mlp else 1
+    c.add("wi", nn.dense(key(), E, (g, F), ("embed", "gate", "mlp")))
+    c.add("wo", nn.dense(key(), F, E, ("mlp", "embed")))
+    return c.params, c.axes
+
+
+def _act(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_block(p, x, cfg: ArchConfig):
+    from repro.distributed import actsharding
+    dt = x.dtype
+    wi = actsharding.gathered_weight(p["wi"].astype(dt), model_dim=-1)
+    wo = actsharding.gathered_weight(p["wo"].astype(dt), model_dim=0)
+    h = jnp.einsum("bse,egf->bsgf", x, wi)
+    h = actsharding.constrain_hidden(h)
+    if cfg.gated_mlp:
+        h = _act(h[..., 0, :], cfg.act) * h[..., 1, :]
+    else:
+        h = _act(h[..., 0, :], cfg.act)
+    return jnp.einsum("bsf,fe->bse", h, wo)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k router, capacity-bounded sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key: nn.KeyGen, cfg: ArchConfig):
+    c = nn.ParamCollector()
+    E, F, X = cfg.d_model, cfg.d_ff, cfg.n_experts
+    c.add("router", nn.dense(key(), E, X, ("embed", "experts")))
+    c.add("wi", nn.dense(key(), X, (E, 2, F),
+                         ("experts", "embed", "gate", "expert_mlp")))
+    c.add("wo", nn.dense(key(), X, (F, E),
+                         ("experts", "expert_mlp", "embed")))
+    return c.params, c.axes
+
+
+def moe_block(p, x, cfg: ArchConfig, *, dropless: bool = False):
+    """Token-choice top-k MoE.
+
+    Two dispatch strategies sharing the router:
+      * capacity-bounded (default; SPMD-friendly): tokens sorted by expert
+        are gathered into an [X, C, E] buffer (overflow dropped — standard
+        capacity-factor semantics) and batch-matmul'd per expert.
+      * dropless (serving): lax.ragged_dot over the expert-sorted tokens —
+        exact, FLOPs proportional to routed tokens, no drops.
+    """
+    B, S, E = x.shape
+    X, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, E)
+    logits = jnp.einsum("te,ex->tx", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, K)                   # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                              # [T*K]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(sorted_e, length=X)
+    src_tok = order // K
+    wi = p["wi"].astype(xt.dtype)
+    wo = p["wo"].astype(xt.dtype)
+
+    if dropless:
+        xs = xt[src_tok]                                  # [T*K, E]
+        gs = counts.astype(jnp.int32)
+        h0 = jax.lax.ragged_dot(xs, wi[:, :, 0], gs)
+        if cfg.gated_mlp:
+            h1 = jax.lax.ragged_dot(xs, wi[:, :, 1], gs)
+            h = _act(h0, cfg.act) * h1
+        else:
+            h = _act(h0, cfg.act)
+        routed = jax.lax.ragged_dot(h, wo, gs)            # [T*K, E]
+    else:
+        C = int(cfg.capacity_factor * T * K / X) + 1
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(T * K) - starts[sorted_e]
+        keep = pos_in_e < C
+        slot = jnp.where(keep, sorted_e * C + pos_in_e, X * C)
+        buf = jnp.zeros((X * C + 1, E), xt.dtype).at[slot].set(xt[src_tok])
+        buf = buf[:-1].reshape(X, C, E)
+        h = jnp.einsum("xce,xegf->xcgf", buf, wi)
+        h = _act(h[..., 0, :], cfg.act) * h[..., 1, :]
+        out = jnp.einsum("xcf,xfe->xce", h, wo)
+        out_flat = out.reshape(X * C, E)
+        routed = jnp.where(keep[:, None],
+                           out_flat[jnp.minimum(slot, X * C - 1)], 0.0)
+
+    g = gate.reshape(-1)[order]
+    y = jax.ops.segment_sum(routed * g[:, None], src_tok, num_segments=T)
+    return y.reshape(B, S, E).astype(x.dtype), probs
+
+
+def moe_aux_loss(probs, idx_unused=None):
+    """Switch-style load-balance loss (mean prob * fraction routed)."""
+    me = probs.mean(0)
+    return (me * me * probs.shape[-1]).sum()
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key: nn.KeyGen, cfg: ArchConfig):
+    c = nn.ParamCollector()
+    E = cfg.d_model
+    W = cfg.lru_width or E
+    c.add("wx", nn.dense(key(), E, W, ("embed", "mlp")))       # input branch
+    c.add("wy", nn.dense(key(), E, W, ("embed", "mlp")))       # gate branch
+    c.add("conv_w", nn.zeros((4, W), ("conv", "mlp")))
+    c.add("conv_b", nn.zeros((W,), ("mlp",)))
+    c.add("wa", nn.dense(key(), W, W, ("mlp", "mlp2")))        # recurrence gate
+    c.add("ba", nn.zeros((W,), ("mlp",)))
+    c.add("wi", nn.dense(key(), W, W, ("mlp", "mlp2")))        # input gate
+    c.add("bi", nn.zeros((W,), ("mlp",)))
+    c.add("lam", nn.ones((W,), ("mlp",)))                      # Lambda param
+    c.add("wo", nn.dense(key(), W, E, ("mlp", "embed")))
+    return c.params, c.axes
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x [B, S, W]; w [K, W] depthwise; optional state [B, K-1, W]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], 1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def rglru_scan(a, gx, h0=None):
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * gx_t, via associative scan."""
+    B, S, W = a.shape
+    mult = jnp.sqrt(jnp.maximum(1.0 - a ** 2, 1e-9))
+    b = mult * gx
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    af, bf = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = bf if h0 is None else bf + af * h0[:, None, :]
+    return h, h[:, -1]
+
+
+def rglru_block(p, x, cfg: ArchConfig, state=None):
+    """Griffin recurrent block.  state = (conv_state, h_state) or None.
+    Returns (y, new_state)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bse,ew->bsw", x, p["wy"].astype(dt)))
+    u = jnp.einsum("bse,ew->bsw", x, p["wx"].astype(dt))
+    conv_state = state[0] if state is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv_w"].astype(dt) + _conv_id(p),
+                                 p["conv_b"].astype(dt), conv_state)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"])   # c=8 per the paper
+    a = jnp.exp(log_a)
+    gx = i * uf
+    h0 = state[1] if state is not None else None
+    h, h_last = rglru_scan(a, gx, h0)
+    y = (h.astype(dt) * gate)
+    y = jnp.einsum("bsw,we->bse", y, p["wo"].astype(dt))
+    return y, (new_conv, h_last)
+
+
+def _conv_id(p):
+    """Identity kernel at the last tap so a zero-init conv passes input."""
+    w = jnp.zeros_like(p["conv_w"])
+    return w.at[-1].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD block (arXiv:2405.21060)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key: nn.KeyGen, cfg: ArchConfig):
+    c = nn.ParamCollector()
+    E = cfg.d_model
+    Din = cfg.d_inner_mult * E
+    H = Din // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    c.add("in_proj", nn.dense(key(), E, 2 * Din + 2 * G * N + H,
+                              ("embed", "mlp")))
+    c.add("conv_w", nn.zeros((cfg.conv_kernel, Din + 2 * G * N),
+                             ("conv", "mlp")))
+    c.add("conv_b", nn.zeros((Din + 2 * G * N,), ("mlp",)))
+    c.add("a_log", nn.zeros((H,), ("heads",)))
+    c.add("dt_bias", nn.zeros((H,), ("heads",)))
+    c.add("d_skip", nn.ones((H,), ("heads",)))
+    c.add("norm_scale", nn.ones((Din,), ("mlp",)))
+    c.add("out_proj", nn.dense(key(), Din, E, ("mlp", "embed")))
+    return c.params, c.axes
+
+
+def mamba2_split(cfg: ArchConfig):
+    E = cfg.d_model
+    Din = cfg.d_inner_mult * E
+    H = Din // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    return Din, H, G, N
+
+
+def mamba2_block(p, x, cfg: ArchConfig, state=None, *, use_kernel=False):
+    """Mamba2 block. state = (conv_state, ssd_state [B,H,P,N]) or None.
+    Returns (y, new_state)."""
+    from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+    dt_ = x.dtype
+    B_, S, E = x.shape
+    Din, H, G, N = mamba2_split(cfg)
+    P = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bse,ef->bsf", x, p["in_proj"].astype(dt_))
+    z, xbc, dt = jnp.split(zxbcdt, [Din, 2 * Din + 2 * G * N], axis=-1)
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _causal_conv1d(
+        xbc, p["conv_w"].astype(dt_) + _conv_id_wide(p),
+        p["conv_b"].astype(dt_), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [Din, Din + G * N], axis=-1)
+    xs = xs.reshape(B_, S, H, P)
+    Bc = Bc.reshape(B_, S, G, N)
+    Cc = Cc.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))
+    x_in = xs * dt[..., None].astype(dt_)
+    ssd_state = state[1] if state is not None else None
+    if S == 1 and ssd_state is not None:
+        new_ssd, y = ssd_ref.ssd_decode_step(
+            ssd_state, x_in[:, 0].astype(jnp.float32), a[:, 0],
+            Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        fn = ssd_ops.ssd_scan if use_kernel else ssd_ref.ssd_scan
+        y, new_ssd = fn(x_in, a, Bc, Cc)
+    y = y.reshape(B_, S, Din).astype(dt_) + \
+        (xs * p["d_skip"][:, None].astype(dt_)).reshape(B_, S, Din)
+    # gated RMSNorm then out-projection
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (yf * p["norm_scale"]).astype(dt_)
+    out = jnp.einsum("bsf,fe->bse", y, p["out_proj"].astype(dt_))
+    return out, (new_conv, new_ssd)
+
+
+def _conv_id_wide(p):
+    w = jnp.zeros_like(p["conv_w"])
+    return w.at[-1].set(1.0)

@@ -1,0 +1,98 @@
+"""Minimal pytree parameter system (no flax dependency).
+
+Params are nested dicts of jnp arrays.  A parallel tree of *logical axis
+tuples* (same structure, one tuple per leaf) drives sharding: logical names
+("embed", "vocab", "heads", "mlp", "experts", ...) are resolved to mesh axes
+through a rules dict (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Axes = dict
+
+
+class KeyGen:
+    """Deterministic PRNG key dispenser."""
+
+    def __init__(self, seed_or_key):
+        if isinstance(seed_or_key, int):
+            self._key = jax.random.PRNGKey(seed_or_key)
+        else:
+            self._key = seed_or_key
+
+    def __call__(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+def dense(key, in_dim: int, out_dims, axes: tuple, *, dtype=jnp.float32,
+          scale: float | None = None):
+    """He/LeCun-style init for a dense weight [in_dim, *out_dims]."""
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    shape = (in_dim,) + out_dims
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    assert len(axes) == len(shape), (axes, shape)
+    return w.astype(dtype), axes
+
+
+def embed(key, vocab: int, dim: int, *, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, dim), dtype=jnp.float32)
+    return w.astype(dtype), ("vocab", "embed")
+
+
+def zeros(shape, axes: tuple, *, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones(shape, axes: tuple, *, dtype=jnp.float32):
+    return jnp.ones(shape, dtype), axes
+
+
+class ParamCollector:
+    """Builds the (params, axes) twin trees."""
+
+    def __init__(self):
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def add(self, name: str, value_axes: tuple[jax.Array, tuple]):
+        value, axes = value_axes
+        self.params[name] = value
+        self.axes[name] = axes
+        return value
+
+    def sub(self, name: str) -> "ParamCollector":
+        c = ParamCollector()
+        self.params[name] = c.params
+        self.axes[name] = c.axes
+        return c
+
+
+def stack_params(trees: list[Params]) -> Params:
+    """Stack a list of identical param trees along a new leading axis
+    (for scan-over-layers)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_axes(axes: Axes) -> Axes:
+    """Prepend the 'layers' logical axis to every leaf."""
+    return jax.tree.map(lambda a: ("layers",) + a,
+                        axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, params)

@@ -1,0 +1,58 @@
+"""Checkpointing: flattened-key npz for arrays + msgpack metadata.
+
+Host-gather based (arrays are device_get before writing) — suitable for the
+CPU/dev environment; on a real pod this would stream per-shard files, which
+the format supports by writing one npz per process.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params, opt_state=None, *, step: int = 0,
+         metadata: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, **(metadata or {})}, f)
+
+
+def restore(path: str, params_like, opt_state_like=None):
+    """Restore into the structure of `params_like` (shapes must match)."""
+    def unflatten(like, file):
+        flat = dict(np.load(file))
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+        treedef = jax.tree_util.tree_structure(like)
+        out = []
+        for path, leaf in leaves_with_path:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = flat[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            out.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    params = unflatten(params_like, os.path.join(path, "params.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if opt_state_like is not None:
+        opt_state = unflatten(opt_state_like,
+                              os.path.join(path, "opt_state.npz"))
+        return params, opt_state, meta
+    return params, meta

@@ -1,0 +1,49 @@
+"""Training step: loss, gradients, optimizer update (pjit-ready)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.training import optimizer as opt
+
+
+def cross_entropy(logits, targets, mask):
+    """Token-mean CE with a numerically-stable logsumexp over the (possibly
+    model-sharded) vocab axis."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, aux_weight: float = 0.01,
+            remat: bool = True, unroll: int = 1):
+    logits, aux = T.forward(params, cfg, batch["tokens"],
+                            batch.get("frontend"), remat=remat,
+                            unroll=unroll)
+    ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                       batch["mask"][:, 1:].astype(jnp.float32))
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: opt.AdamWConfig, *,
+                    remat: bool = True, unroll: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  jit/pjit is applied by the caller (launcher / dry-run)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat, unroll=unroll),
+            has_aux=True,
+        )(params)
+        params, opt_state, om = opt.apply(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step

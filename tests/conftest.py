@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run's 512-device override is local to
+# launch/dryrun.py, never global)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,126 @@
+"""Integration + property tests for the cycle-accurate dataplane."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, token_bucket as tb
+from repro.core.accelerator import (AcceleratorSpec, AccelTable, CATALOG,
+                                    CURVE_LINEAR)
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import ARB_RR, LinkSpec
+from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SimConfig,
+                            gen_arrivals, simulate)
+
+
+def _sim_two(slos=(10.0, 20.0), n_ticks=60_000, shaping=SHAPING_HW,
+             msg=1024, accel=None, **cfg_kw):
+    specs = [
+        FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(msg, load=0.9, process="poisson"),
+                 SLO.gbps(s))
+        for i, s in enumerate(slos)
+    ]
+    flows = FlowSet.build(specs)
+    accel = accel or CATALOG["synthetic50"]
+    cfg = SimConfig(n_ticks=n_ticks, shaping=shaping, arbiter=ARB_RR,
+                    **cfg_kw)
+    arr = gen_arrivals(flows, cfg,
+                       load_ref_gbps={i: 55.0 for i in range(len(slos))})
+    if shaping == SHAPING_HW:
+        tbs = tb.pack([tb.params_for_gbps(s) for s in slos])
+    else:
+        tbs = baselines.make_tb_state(baselines.HOST_NO_TS,
+                                      [tb.TBParams(1, 1, 1)] * len(slos))
+    res = simulate(flows, AccelTable.build([accel]), LinkSpec(), cfg, tbs,
+                   *arr)
+    return res, flows
+
+
+def test_shaped_rates_hit_slo():
+    res, flows = _sim_two()
+    for i, slo in enumerate((10.0, 20.0)):
+        got = res.mean_ingress_gbps(i, flows)
+        assert abs(got - slo) / slo < 0.05, (i, got)
+
+
+def test_conservation_admitted_vs_completed():
+    """Every admitted message either completes or is still in flight."""
+    res, _ = _sim_two()
+    adm = res.counters["c_adm_msgs"]
+    done = res.counters["c_done_msgs"]
+    assert (done <= adm).all()
+    assert (adm - done <= 600).all()  # bounded in-flight
+
+
+def test_unshaped_exceeds_shaped():
+    r1, f1 = _sim_two(shaping=SHAPING_HW)
+    r2, f2 = _sim_two(shaping=SHAPING_NONE)
+    total1 = sum(r1.mean_ingress_gbps(i, f1) for i in range(2))
+    total2 = sum(r2.mean_ingress_gbps(i, f2) for i in range(2))
+    assert total2 > total1  # 30 shaped vs ~46 free-for-all
+
+
+def test_latency_records_positive_and_ordered():
+    res, _ = _sim_two()
+    assert (res.comp_lat_s >= 0).all()
+    assert (res.comp_sz > 0).all()
+
+
+def test_accelerator_capacity_respected():
+    """Completed throughput never exceeds the accelerator's effective
+    capacity at the message size."""
+    accel = CATALOG["synthetic50"]
+    res, flows = _sim_two(slos=(40.0, 40.0), accel=accel)
+    total = sum(res.mean_ingress_gbps(i, flows) for i in range(2))
+    assert total <= accel.effective_gbps(1024) * 1.05
+
+
+def test_link_direction_budget_respected():
+    """Function-call ingress (h2d) cannot exceed the configured link rate."""
+    link = LinkSpec(h2d_gbps=10.0, d2h_gbps=10.0, efficiency=1.0)
+    specs = [FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                      TrafficPattern(4096, load=0.9), SLO.gbps(50))]
+    flows = FlowSet.build(specs)
+    cfg = SimConfig(n_ticks=50_000, shaping=SHAPING_NONE)
+    arr = gen_arrivals(flows, cfg, load_ref_gbps={0: 50.0})
+    tbs = baselines.make_tb_state(baselines.HOST_NO_TS, [tb.TBParams(1, 1, 1)])
+    res = simulate(flows, AccelTable.build([CATALOG["synthetic50"]]), link,
+                   cfg, tbs, *arr)
+    assert res.mean_ingress_gbps(0, flows) <= 10.5
+
+
+@settings(max_examples=8, deadline=None)
+@given(slo=st.floats(2.0, 30.0), msg=st.sampled_from([512, 1024, 4096]))
+def test_property_shaping_accuracy(slo, msg):
+    """For any SLO under capacity, shaped throughput lands within 6%."""
+    res, flows = _sim_two(slos=(slo,), n_ticks=40_000, msg=msg)
+    got = res.mean_ingress_gbps(0, flows)
+    assert abs(got - slo) / slo < 0.06, (slo, msg, got)
+
+
+def test_windowed_reconfiguration_carries_state():
+    """simulate() with a carry resumes without resetting counters, and a
+    register write mid-flight changes the shaped rate (Sec 5.3.1
+    'Dynamism')."""
+    specs = [FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                      TrafficPattern(1024, load=0.9), SLO.gbps(10))]
+    flows = FlowSet.build(specs)
+    cfg = SimConfig(n_ticks=40_000, shaping=SHAPING_HW)
+    full = dataclasses.replace(cfg, n_ticks=80_000)
+    arr = gen_arrivals(flows, full, load_ref_gbps={0: 50.0})
+    tbs1 = tb.pack([tb.params_for_gbps(10)])
+    res1, carry = simulate(flows, AccelTable.build([CATALOG["synthetic50"]]),
+                           LinkSpec(), cfg, tbs1, *arr, return_carry=True)
+    tbs2 = tb.pack([tb.params_for_gbps(20)])
+    res2 = simulate(flows, AccelTable.build([CATALOG["synthetic50"]]),
+                    LinkSpec(), cfg, tbs2, *arr, t0_ticks=40_000,
+                    carry=carry)
+    n1 = res1.counters["c_done_msgs"][0]
+    n2 = res2.counters["c_done_msgs"][0]
+    window_s = cfg.n_ticks * cfg.tick_cycles / cfg.clock_hz
+    rate1 = n1 * 1024 * 8 / window_s / 1e9
+    rate2 = (n2 - n1) * 1024 * 8 / window_s / 1e9
+    assert abs(rate1 - 10) < 1.5
+    assert abs(rate2 - 20) < 2.0

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import token_bucket as tb
+from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
+from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+from repro.kernels.token_bucket import ops as tb_ops, ref as tb_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# token bucket
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 4096])
+@pytest.mark.parametrize("elapsed", [0, 8, 1000, 10**7])
+def test_token_bucket_kernel_matches_oracle(n, elapsed):
+    st = tb.init(RNG.integers(1, 5000, n).astype(np.int32),
+                 RNG.integers(512, 1 << 20, n).astype(np.int32),
+                 RNG.integers(1, 1024, n).astype(np.int32),
+                 RNG.integers(0, 2, n).astype(np.int32))
+    st = st._replace(
+        tokens=jnp.asarray(RNG.integers(0, 1 << 20, n), jnp.int32),
+        cyc=jnp.asarray(RNG.integers(0, 1024, n), jnp.int32) % st.interval)
+    cost = RNG.integers(1, 8192, n).astype(np.int32)
+    want = RNG.random(n) < 0.8
+    new_k, adm_k = tb_ops.token_bucket_step(st, elapsed, cost, want)
+    tk, ck, adm_r = tb_ref.token_bucket_step(
+        st.tokens, st.cyc, st.refill_rate, st.bkt_size, st.interval,
+        st.mode, elapsed, cost, want)
+    np.testing.assert_array_equal(np.asarray(new_k.tokens), np.asarray(tk))
+    np.testing.assert_array_equal(np.asarray(new_k.cyc), np.asarray(ck))
+    np.testing.assert_array_equal(np.asarray(adm_k), np.asarray(adm_r))
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DA_CASES = [
+    # B, H, KvH, D, S, window, dtype
+    (2, 16, 8, 128, 1024, 0, jnp.float32),
+    (1, 8, 1, 64, 512, 0, jnp.float32),
+    (3, 12, 2, 80, 777, 0, jnp.float32),
+    (2, 16, 8, 128, 2048, 256, jnp.bfloat16),
+    (1, 40, 8, 128, 4096, 1024, jnp.float32),
+    (2, 16, 16, 96, 300, 0, jnp.bfloat16),
+    (1, 24, 2, 128, 640, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", DA_CASES)
+def test_decode_attention_matches_oracle(case):
+    B, H, KvH, D, S, w, dt = case
+    q = jnp.asarray(RNG.standard_normal((B, H, D)), dt)
+    k = jnp.asarray(RNG.standard_normal((B, S, KvH, D)), dt)
+    v = jnp.asarray(RNG.standard_normal((B, S, KvH, D)), dt)
+    lengths = jnp.asarray(RNG.integers(max(1, S // 4), S + 1, B), jnp.int32)
+    out_k = da_ops.decode_attention(q, k, v, lengths, window=w)
+    out_r = da_ref.decode_attention(q, k, v, lengths, window=w)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    err = np.max(np.abs(np.asarray(out_k, np.float32)
+                        - np.asarray(out_r, np.float32)))
+    assert err < tol, (case, err)
+
+
+def test_decode_attention_ignores_padding_region():
+    """Entries beyond `lengths` must not affect the output."""
+    B, H, KvH, D, S = 2, 8, 4, 64, 256
+    q = jnp.asarray(RNG.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KvH, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KvH, D)), jnp.float32)
+    lengths = jnp.asarray([100, 180], jnp.int32)
+    out1 = da_ops.decode_attention(q, k, v, lengths)
+    k2 = k.at[:, 200:].set(1e6)
+    v2 = v.at[:, 200:].set(-1e6)
+    out2 = da_ops.decode_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # Bsz, L, H, P, G, N, chunk, dtype
+    (2, 256, 4, 64, 1, 128, 64, jnp.float32),
+    (1, 100, 3, 32, 1, 64, 32, jnp.float32),
+    (2, 128, 8, 64, 2, 128, 128, jnp.float32),
+    (1, 512, 4, 64, 1, 128, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_oracle(case):
+    Bz, L, H, P, G, N, ck, dt = case
+    x = jnp.asarray(RNG.standard_normal((Bz, L, H, P)) * 0.5, dt)
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (Bz, L, H)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bz, L, G, N)) * 0.3, dt)
+    C = jnp.asarray(RNG.standard_normal((Bz, L, G, N)) * 0.3, dt)
+    yk, sk = ssd_ops.ssd_scan(x, a, B, C, chunk=ck)
+    yr, sr = ssd_ref.ssd_scan(x, a, B, C)
+    tol = 1e-1 if dt == jnp.bfloat16 else 2e-3
+    rel = np.max(np.abs(np.asarray(yk, np.float32)
+                        - np.asarray(yr, np.float32))) \
+        / (np.abs(np.asarray(yr, np.float32)).max() + 1e-9)
+    assert rel < tol, (case, rel)
+    srel = np.max(np.abs(np.asarray(sk) - np.asarray(sr))) \
+        / (np.abs(np.asarray(sr)).max() + 1e-9)
+    assert srel < tol
+
+
+def test_ssd_decode_step_matches_scan_tail():
+    """Running L-1 steps via scan then 1 decode step == full scan."""
+    Bz, L, H, P, G, N = 1, 64, 2, 32, 1, 64
+    x = jnp.asarray(RNG.standard_normal((Bz, L, H, P)) * 0.5, jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.8, 0.999, (Bz, L, H)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bz, L, G, N)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((Bz, L, G, N)) * 0.3, jnp.float32)
+    y_full, s_full = ssd_ref.ssd_scan(x, a, B, C)
+    _, s_head = ssd_ref.ssd_scan(x[:, :L-1], a[:, :L-1], B[:, :L-1],
+                                 C[:, :L-1])
+    s_dec, y_dec = ssd_ref.ssd_decode_step(s_head, x[:, L-1], a[:, L-1],
+                                           B[:, L-1], C[:, L-1])
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full[:, L-1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_dec), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,149 @@
+"""Property tests on layer-level invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L, module as nn
+from repro.models.config import ArchConfig
+
+RNG = np.random.default_rng(7)
+
+
+def _naive_attention(q, k, v, *, causal=True, window=0, chunk_size=0):
+    B, Sq, H, D = q.shape
+    Sk, KvH = k.shape[1], k.shape[2]
+    G = H // KvH
+    qg = q.reshape(B, Sq, KvH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqnhd,bknd->bqnhk", qg,
+                   k.astype(jnp.float32)) * D ** -0.5
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+        if window > 0:
+            mask &= qi - ki < window
+        if chunk_size > 0:
+            mask &= (qi // chunk_size) == (ki // chunk_size)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bqnhk,bknd->bqnhd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D)
+
+
+@settings(max_examples=12, deadline=None)
+@given(s=st.integers(4, 96), h=st.sampled_from([2, 4]),
+       kv=st.sampled_from([1, 2]), d=st.sampled_from([8, 16]),
+       window=st.sampled_from([0, 7, 16]),
+       kv_chunk=st.sampled_from([8, 32, 512]))
+def test_flash_attention_matches_naive(s, h, kv, d, window, kv_chunk):
+    """The chunked-online-softmax attention == naive softmax attention for
+    any shape, window, and chunking."""
+    if h % kv:
+        h = kv * max(1, h // kv)
+    q = jnp.asarray(RNG.standard_normal((2, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, s, kv, d)), jnp.float32)
+    got = L.flash_attention(q, k, v, mask_kind="causal", window=window,
+                            kv_chunk=kv_chunk)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_chunked_mask():
+    """llama4-style chunked attention equals naive with the same mask."""
+    q = jnp.asarray(RNG.standard_normal((1, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 64, 2, 16)), jnp.float32)
+    got = L.flash_attention(q, k, v, chunk_size=16, kv_chunk=32)
+    want = _naive_attention(q, k, v, chunk_size=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _moe_cfg(n_experts=4, top_k=2):
+    return ArchConfig(name="t", arch_type="moe", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                      n_experts=n_experts, top_k=top_k,
+                      capacity_factor=100.0)  # huge capacity -> dropless
+
+
+@pytest.mark.parametrize("top_k", [1, 2])
+def test_moe_capacity_equals_dropless_at_high_capacity(top_k):
+    """With capacity >> tokens, the capacity path must equal ragged_dot
+    dropless dispatch exactly (same router, same experts)."""
+    cfg = _moe_cfg(top_k=top_k)
+    key = nn.KeyGen(3)
+    p, _ = L.init_moe(key, cfg)
+    x = jnp.asarray(RNG.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y_cap, _ = L.moe_block(p, x, cfg, dropless=False)
+    y_drop, _ = L.moe_block(p, x, cfg, dropless=True)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_drop),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_gates_sum_to_one_effect():
+    """Scaling all expert outputs scales the MoE output (gate linearity)."""
+    cfg = _moe_cfg()
+    key = nn.KeyGen(3)
+    p, _ = L.init_moe(key, cfg)
+    x = jnp.asarray(RNG.standard_normal((1, 6, cfg.d_model)), jnp.float32)
+    y1, _ = L.moe_block(p, x, cfg, dropless=True)
+    p2 = dict(p)
+    p2["wo"] = p["wo"] * 2.0
+    y2, _ = L.moe_block(p2, x, cfg, dropless=True)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), s=st.integers(4, 32))
+def test_rglru_scan_matches_sequential(seed, s):
+    """Associative-scan RG-LRU == step-by-step recurrence."""
+    rng = np.random.default_rng(seed)
+    B, W = 2, 8
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (B, s, W)), jnp.float32)
+    gx = jnp.asarray(rng.standard_normal((B, s, W)), jnp.float32)
+    h, h_last = L.rglru_scan(a, gx)
+    # sequential reference
+    ht = np.zeros((B, W), np.float32)
+    mult = np.sqrt(np.maximum(1 - np.asarray(a) ** 2, 1e-9))
+    for t in range(s):
+        ht = np.asarray(a)[:, t] * ht + mult[:, t] * np.asarray(gx)[:, t]
+        np.testing.assert_allclose(np.asarray(h[:, t]), ht, rtol=2e-4,
+                                   atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), ht, rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_with_initial_state():
+    B, s, W = 1, 5, 4
+    a = jnp.full((B, s, W), 0.9, jnp.float32)
+    gx = jnp.ones((B, s, W), jnp.float32)
+    h0 = 3.0 * jnp.ones((B, W), jnp.float32)
+    h, _ = L.rglru_scan(a, gx, h0)
+    # h_1 = a*h0 + sqrt(1-a^2)*gx
+    want = 0.9 * 3.0 + np.sqrt(1 - 0.81)
+    np.testing.assert_allclose(np.asarray(h[:, 0]), want, rtol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    """RoPE is an isometry, and q.k depends only on relative position."""
+    D = 16
+    x = jnp.asarray(RNG.standard_normal((1, 8, 2, D)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = L.rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    q = jnp.asarray(RNG.standard_normal((1, 1, 1, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 1, 1, D)), jnp.float32)
+    def dot_at(pq, pk):
+        qr = L.rope(q, jnp.asarray([[pq]]), theta=10_000.0)
+        kr = L.rope(k, jnp.asarray([[pk]]), theta=10_000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-6  # actually position-dep

@@ -1,0 +1,105 @@
+"""Control-plane tests: Algorithm 1, profiler, admission, policies."""
+import numpy as np
+import pytest
+
+from repro.core import policies, token_bucket as tb
+from repro.core.accelerator import CATALOG
+from repro.core.flow import SLO, FlowSpec, Path, SLOKind, TrafficPattern
+from repro.core.profiler import ProfileTable, context_key
+from repro.core.runtime import ArcusRuntime
+from repro.core.shaper import reshape_decision
+
+
+def _spec(fid, slo_gbps, msg=1500, load=0.9):
+    return FlowSpec(fid, fid, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(msg, load=load), SLO.gbps(slo_gbps))
+
+
+def test_admission_control_accepts_then_rejects():
+    rt = ArcusRuntime([CATALOG["ipsec32"]])
+    assert rt.register(_spec(0, 10.0))
+    assert rt.register(_spec(1, 20.0))
+    assert not rt.register(_spec(2, 10.0))   # 40 > profiled ~31 Gbps
+    assert len(rt.table) == 2
+
+
+def test_managed_run_meets_slos():
+    rt = ArcusRuntime([CATALOG["ipsec32"]])
+    rt.register(_spec(0, 10.0))
+    rt.register(_spec(1, 20.0))
+    _, reports = rt.run_managed(total_ticks=90_000, window_ticks=30_000,
+                                load_ref_gbps={0: 32.0, 1: 32.0})
+    last = reports[-1]
+    assert abs(last.measured[0] - 10.0) < 0.5
+    assert abs(last.measured[1] - 20.0) < 1.0
+    assert not last.violated
+
+
+def test_profile_table_cache_and_serialization(tmp_path):
+    pt = ProfileTable(n_ticks=20_000)
+    ctx = [(Path.FUNCTION_CALL, 1500, 0.9)] * 2
+    e1 = pt.profile_context(CATALOG["ipsec32"], ctx)
+    e2 = pt.profile_context(CATALOG["ipsec32"], ctx)   # cached
+    assert e1 is e2
+    p = tmp_path / "profile.json"
+    pt.to_json(str(p))
+    pt2 = ProfileTable.from_json(str(p))
+    k = context_key("ipsec32", ctx)
+    assert abs(pt2.entries[k].capacity_gbps - e1.capacity_gbps) < 1e-6
+
+
+def test_profiler_small_messages_collapse_capacity():
+    pt = ProfileTable(n_ticks=20_000)
+    big = pt.profile_context(CATALOG["ipsec32"],
+                             [(Path.FUNCTION_CALL, 1500, 0.9)] * 2)
+    small = pt.profile_context(CATALOG["ipsec32"],
+                               [(Path.FUNCTION_CALL, 64, 0.9)] * 2)
+    # Fig 3b: tiny-message mixtures deliver ~18-32% of peak
+    assert small.capacity_gbps < 0.4 * big.capacity_gbps
+
+
+def test_slo_tag_friendly_vs_violating():
+    pt = ProfileTable(n_ticks=20_000)
+    e = pt.profile_context(CATALOG["ipsec32"],
+                           [(Path.FUNCTION_CALL, 1500, 0.9)] * 2)
+    half = e.capacity_gbps / 2
+    assert e.slo_tag([0.9 * half, 0.9 * half])
+    assert not e.slo_tag([1.2 * half, 1.2 * half])
+
+
+def test_reshape_decision_heterogeneity():
+    # compression: SLO on input stream -> ingress == SLO
+    d = reshape_decision(CATALOG["compress"], SLO.gbps(5.0), 16384)
+    assert d.params.mode == tb.MODE_GBPS
+    # decompression (R>1): deliverable is expanded output -> ingress < SLO
+    d2 = reshape_decision(CATALOG["decompress"], SLO.gbps(5.0), 16384)
+    assert tb.achieved_rate(d2.params) * 8 / 1e9 < 5.0
+    # giant messages get split
+    d3 = reshape_decision(CATALOG["aes256"], SLO.gbps(5.0), 512 * 1024)
+    assert d3.resize_to is not None and d3.resize_to < 512 * 1024
+
+
+def test_policies():
+    r = policies.plan_reserved(SLO.gbps(8.0))
+    o = policies.plan_on_demand(SLO.gbps(8.0))
+    b = policies.plan_managed_burst(SLO.gbps(8.0), burst_x=10.0)
+    opp = policies.plan_opportunistic()
+    assert r.admission_guaranteed and not o.admission_guaranteed
+    assert b.params.bkt_size > r.params.bkt_size        # burst budget
+    assert b.capacity_debit_gbps == pytest.approx(80.0)  # debit the burst
+    assert opp.capacity_debit_gbps == 0.0 and opp.weight < 0.1
+
+
+def test_path_selection_moves_saturated_flow():
+    """A flow on a saturated ingress direction moves to an alternate path."""
+    rt = ArcusRuntime([CATALOG["synthetic50"]],
+                      alt_paths={0: [Path.INLINE_NIC_RX]})
+    # saturate h2d: two big function-call flows
+    assert rt.register(_spec(0, 20.0, msg=4096))
+    st = rt.table[0]
+    cur = {"c_adm_bytes": np.array([7e9]), "c_done_bytes": np.array([7e9]),
+           "c_adm_msgs": np.array([1]), "c_done_msgs": np.array([1]),
+           "c_drops": np.array([0]), "c_lat_sum": np.array([0.0])}
+    prev = {k: np.zeros_like(v) for k, v in cur.items()}
+    newp = rt._path_selection(st, cur, prev, window_s=1.0)
+    assert newp == Path.INLINE_NIC_RX

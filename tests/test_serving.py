@@ -1,0 +1,98 @@
+"""Serving engine + Arcus scheduler tests."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced_config
+from repro.core.flow import SLO
+from repro.models import transformer as T
+from repro.serving.costmodel import HardwareSpec, StepCostModel
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request, Tenant
+from repro.serving.scheduler import ArcusScheduler, FCFSScheduler
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced_config("qwen2.5-14b")
+    params, _ = T.init_model(0, cfg)
+    return cfg, params
+
+
+def test_engine_generates_deterministically(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    req = Request(0, 0, list(RNG.integers(0, cfg.vocab, 8)), 5)
+    eng.admit(req)
+    while not req.done:
+        eng.step()
+    assert len(req.generated) == 5
+    # same prompt, fresh engine -> same tokens (greedy)
+    eng2 = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    req2 = Request(1, 0, list(req.prompt), 5)
+    eng2.admit(req2)
+    while not req2.done:
+        eng2.step()
+    assert req.generated == req2.generated
+
+
+def test_engine_batched_equals_single(setup):
+    """Continuous batching must not change any request's tokens."""
+    cfg, params = setup
+    prompts = [list(RNG.integers(0, cfg.vocab, 8)) for _ in range(3)]
+    solo = []
+    for i, p in enumerate(prompts):
+        eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+        r = Request(i, 0, p, 4)
+        eng.admit(r)
+        while not r.done:
+            eng.step()
+        solo.append(r.generated)
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=64)
+    reqs = [Request(10 + i, 0, p, 4) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.admit(r)
+    while any(not r.done for r in reqs):
+        eng.step()
+    for s, r in zip(solo, reqs):
+        assert s == r.generated
+
+
+def test_cost_model_monotonic(setup):
+    cfg, _ = setup
+    cm = StepCostModel(cfg, HardwareSpec(chips=1))
+    assert cm.decode_s(8, 1024) > cm.decode_s(1, 1024)
+    assert cm.decode_s(1, 8192) > cm.decode_s(1, 256)
+    assert cm.prefill_s(1, 2048) > cm.prefill_s(1, 128)
+
+
+def test_arcus_scheduler_shapes_greedy_tenant(setup):
+    cfg, params = setup
+
+    def build(shaped):
+        eng = ServingEngine(cfg, params, max_batch=4, max_len=128)
+        cm = StepCostModel(cfg, HardwareSpec(chips=1))
+        tenants = [Tenant(0, SLO.iops(2000.0)), Tenant(1, SLO.iops(200.0))]
+        cls = ArcusScheduler if shaped else FCFSScheduler
+        sched = cls(eng, tenants, cm)
+        rid = 0
+        # tenant 1 greedy: long prompts at t=0; tenant 0 trickles
+        for _ in range(6):
+            sched.submit(Request(rid, 1,
+                                 list(RNG.integers(0, cfg.vocab, 48)), 8))
+            rid += 1
+        for k in range(6):
+            sched.submit(Request(rid, 0,
+                                 list(RNG.integers(0, cfg.vocab, 8)), 4,
+                                 arrive_s=k * 0.05))
+            rid += 1
+        return sched
+
+    arcus = build(True).run(3.0, max_rounds=250)
+    fcfs = build(False).run(3.0, max_rounds=250)
+    # shaped: tenant1 admission gated by its bucket -> tenant0 served early
+    t0_ttft_arcus = np.mean(arcus[0].ttft) if arcus[0].ttft else np.inf
+    t0_ttft_fcfs = np.mean(fcfs[0].ttft) if fcfs[0].ttft else np.inf
+    assert arcus[0].served_tokens > 0
+    assert t0_ttft_arcus <= t0_ttft_fcfs + 1e-9

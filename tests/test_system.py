@@ -1,0 +1,126 @@
+"""End-to-end behaviour tests: the paper's headline claims in miniature.
+
+Full-scale numbers live in benchmarks/ + EXPERIMENTS.md; these assert the
+*direction and mechanism* of each claim quickly enough for CI.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import baselines, token_bucket as tb
+from repro.core.accelerator import CATALOG, AccelTable
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.sim import SimConfig, gen_arrivals, simulate
+
+
+def _fig6_mini(sys_name: str, load_x: float = 1.5, n_ticks: int = 50_000):
+    sys_cfg = baselines.ALL[sys_name]
+    nvme = CATALOG["nvme_raid0"]
+    slo1, slo2 = 300e3, 200e3
+    specs = [
+        FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(4096, rate_mps=slo1 * load_x,
+                                process="poisson"), SLO.iops(slo1)),
+        FlowSpec(1, 1, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(4096, rate_mps=slo2 * load_x,
+                                process="poisson"), SLO.iops(slo2)),
+    ]
+    flows = FlowSet.build(specs)
+    cfg = baselines.make_sim_config(sys_cfg, n_ticks, tick_cycles=64,
+                                    comp_cap=1 << 16, k_grant=8, k_srv=8,
+                                    k_eg=8, qlen=512, lmax=64)
+    arr = gen_arrivals(flows, cfg, seed=3)
+    plans = [tb.params_for_iops(slo1), tb.params_for_iops(slo2)]
+    tbs = baselines.make_tb_state(sys_cfg, plans)
+    stall = baselines.make_stall_mask(sys_cfg, cfg)
+    res = simulate(flows, AccelTable.build([nvme]), LinkSpec(credits=256),
+                   cfg, tbs, *arr, stall_mask=stall)
+    return res
+
+
+def test_claim_arcus_slo_accuracy():
+    """Arcus holds both users within ~2% of 300K/200K IOPS."""
+    res = _fig6_mini("Arcus")
+    warm = 0.2 * res.seconds
+    r1 = res.mean_rate(0, "iops", warmup_s=warm)
+    r2 = res.mean_rate(1, "iops", warmup_s=warm)
+    assert abs(r1 - 300e3) / 300e3 < 0.02
+    assert abs(r2 - 200e3) / 200e3 < 0.02
+
+
+def test_claim_tail_latency_reduction():
+    """Arcus cuts 99.9th% latency vs software shaping (paper: up to 45%)."""
+    arcus = _fig6_mini("Arcus", load_x=0.9)
+    reflex = _fig6_mini("Host_TS_reflex", load_x=0.9)
+    la = arcus.latency_percentiles(0, (99.9,))[99.9]
+    lr = reflex.latency_percentiles(0, (99.9,))[99.9]
+    assert la < lr, (la, lr)
+    assert 1 - la / lr > 0.2   # at least 20% reduction in miniature
+
+
+def test_claim_throughput_variance():
+    """Arcus per-window throughput variance is far below software shaping
+    (paper: <1% vs 6.5-24.3%)."""
+    arcus = _fig6_mini("Arcus")
+    fc = _fig6_mini("Host_TS_firecracker")
+    wa = arcus.throughput_samples(0, 500, "iops",
+                                  warmup_s=0.2 * arcus.seconds)
+    wf = fc.throughput_samples(0, 500, "iops", warmup_s=0.2 * fc.seconds)
+    cv_a = wa.std() / wa.mean()
+    cv_f = wf.std() / wf.mean()
+    assert cv_a < 0.02
+    assert cv_f > 2 * cv_a
+
+
+def test_claim_use_case2_tiny_messages():
+    """Shaping the MTU stream protects the 64B flow's tail latency."""
+    from benchmarks.fig9_bursty_tiny import _run
+    arcus = _run("Arcus", 50_000)
+    bypassed = _run("Bypassed_noTS_panic", 50_000)
+    assert arcus["vm1_p99_us"] < bypassed["vm1_p99_us"] / 1.9
+    assert abs(arcus["vm2_gbps"] - 32.0) < 3.0
+
+
+def test_claim_heterogeneity_r_ratios():
+    """Egress/ingress ratio classes (Sec 2.2) behave as specified."""
+    m = np.array([4096.0])
+    assert CATALOG["aes256"].egress_bytes(m)[0] == 4096          # R = 1
+    assert CATALOG["decompress"].egress_bytes(m)[0] > 4096       # R > 1
+    assert CATALOG["compress"].egress_bytes(m)[0] < 4096         # R < 1
+    assert CATALOG["sha3_512"].egress_bytes(m)[0] == 64          # fixed
+
+
+def test_dryrun_lowering_machinery_tiny_mesh():
+    """The dry-run's sharding resolution lowers on a 1x1 dev mesh with a
+    reduced config (the 512-device run is exercised by launch/dryrun.py)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.registry import get_reduced_config
+    from repro.distributed import sharding as SH
+    from repro.launch.mesh import make_dev_mesh
+    from repro.models import transformer as T
+
+    cfg = get_reduced_config("mixtral-8x22b")
+    mesh = make_dev_mesh(1, 1)
+    rules = SH.rules_for_config(cfg)
+    axes = T.init_model_axes(cfg)
+    pshapes = jax.eval_shape(
+        lambda: T.init_model_params_only(0, cfg, dtype=jnp.float32))
+    pshard = SH.param_shardings(axes, pshapes, mesh, rules)
+    cspecs = jax.eval_shape(
+        lambda: T.init_cache(cfg, 4, 64, jnp.float32))
+    cshard = SH.cache_shardings(cspecs, mesh, cfg)
+    with mesh:
+        fn = jax.jit(
+            lambda p, t, l, c: T.decode_step(p, cfg, t, l, c),
+            in_shardings=(pshard, NamedSharding(mesh, P()),
+                          NamedSharding(mesh, P()), cshard),
+            out_shardings=(None, cshard))
+        lowered = fn.lower(pshapes,
+                           jax.ShapeDtypeStruct((4, 1), jnp.int32),
+                           jax.ShapeDtypeStruct((4,), jnp.int32), cspecs)
+        compiled = lowered.compile()
+        assert compiled.cost_analysis() is not None
