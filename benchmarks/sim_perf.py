@@ -1,0 +1,152 @@
+"""Simulation-engine performance: compile cache, donated carries, batching.
+
+Tracks the harness-speed trajectory of the compiled dataplane engine
+(repro.core.engine) — the numbers that decide whether the paper-scale
+experiments (100-window managed runs, multi-seed CDF sweeps) run in seconds
+or in minutes:
+
+  sim_perf/cold_compile   — first simulate() call: trace + XLA compile + run
+  sim_perf/cached_rerun   — same-signature re-invocation (pure execution);
+                            speedup_x = cold / cached is the headline
+  sim_perf/managed_10w    — ArcusRuntime.run_managed over 10 windows with a
+                            register write every window; `traces` proves the
+                            tick scan compiled exactly once
+  sim_perf/batch8         — simulate_batch over 8 seeds in one vmap call vs
+                            8 serial simulate() calls
+  sim_perf/grant_vec      — vectorized RR grant fast path vs the sequential
+                            argmin loop (16 flows, 8-wide grants)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import engine, token_bucket as tb
+from repro.core.accelerator import CATALOG, AccelTable
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.runtime import ArcusRuntime
+from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SimConfig,
+                            gen_arrivals, simulate, simulate_batch,
+                            stack_arrivals)
+
+
+def _scenario(n_flows: int, n_ticks: int, *, shaping=SHAPING_HW,
+              k_grant: int = 4, grant_fast: bool = True, seed: int = 0):
+    slo = 40.0 / n_flows
+    specs = [FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                      TrafficPattern(1024, load=0.9 / n_flows,
+                                     process="poisson"), SLO.gbps(slo))
+             for i in range(n_flows)]
+    flows = FlowSet.build(specs)
+    cfg = SimConfig(n_ticks=n_ticks, shaping=shaping, k_grant=k_grant,
+                    grant_fast=grant_fast)
+    arr = gen_arrivals(flows, cfg, seed=seed,
+                       load_ref_gbps={i: 55.0 for i in range(n_flows)})
+    if shaping == SHAPING_HW:
+        tbs = tb.pack([tb.params_for_gbps(slo)] * n_flows)
+    else:
+        big = np.full(n_flows, 2**30, np.int32)
+        tbs = tb.init(big, big, np.ones(n_flows, np.int32),
+                      np.zeros(n_flows, np.int32))
+    accels = AccelTable.build([CATALOG["synthetic50"]])
+    return flows, accels, LinkSpec(), cfg, tbs, arr
+
+
+def run(quick: bool = False) -> list[Row]:
+    # the run_managed per-window regime this engine optimizes
+    window = 2_000 if quick else 5_000
+    rows, payload = [], {}
+
+    # -- cold vs cached -------------------------------------------------
+    engine.cache_clear()
+    flows, accels, link, cfg, tbs, arr = _scenario(4, window)
+    with Timer() as t_cold:
+        simulate(flows, accels, link, cfg, tbs, *arr)
+    with Timer() as t_warm:
+        simulate(flows, accels, link, cfg, tbs, *arr)
+    speedup = t_cold.s / max(t_warm.s, 1e-9)
+    rows.append(Row("sim_perf/cold_compile", us_per_tick(t_cold.s, window),
+                    dict(wall_s=t_cold.s)))
+    rows.append(Row("sim_perf/cached_rerun", us_per_tick(t_warm.s, window),
+                    dict(wall_s=t_warm.s, speedup_x=speedup,
+                         traces=engine.cache_info()["traces"])))
+
+    # -- managed 10-window loop ----------------------------------------
+    rt = ArcusRuntime([CATALOG["synthetic50"]])
+    for i, slo in enumerate((10.0, 20.0)):
+        rt.register(FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                             TrafficPattern(1024, load=0.45), SLO.gbps(slo)))
+    engine.cache_clear()
+    with Timer() as t_mng:
+        rt.run_managed(total_ticks=10 * window, window_ticks=window,
+                       load_ref_gbps={0: 32.0, 1: 32.0})
+    info = engine.cache_info()
+    rows.append(Row("sim_perf/managed_10w",
+                    us_per_tick(t_mng.s, 10 * window),
+                    dict(wall_s=t_mng.s, windows=10,
+                         entries=info["entries"], traces=info["traces"])))
+
+    # -- batch over 8 seeds ---------------------------------------------
+    # fairness: serial calls get the same padded traces the batch uses, so
+    # all eight share one compiled engine (without padding every seed's
+    # trace length differs and each serial call would recompile — exactly
+    # the pathology simulate_batch removes wholesale)
+    seeds = list(range(8))
+    arrs = []
+    for s in seeds:
+        _, _, _, _, _, a = _scenario(4, window, seed=s)
+        arrs.append(a)
+    arr_b = stack_arrivals(arrs)
+    per_seed = [(arr_b[0][b], arr_b[1][b]) for b in range(len(seeds))]
+    with Timer() as t_ser_cold:       # includes the one serial compile
+        serial = [simulate(flows, accels, link, cfg, tbs, *a)
+                  for a in per_seed]
+    with Timer() as t_bat_cold:       # includes the one batch compile
+        batch = simulate_batch(flows, accels, link, cfg,
+                               [tbs] * len(seeds), *arr_b)
+    with Timer() as t_ser:            # warm
+        serial = [simulate(flows, accels, link, cfg, tbs, *a)
+                  for a in per_seed]
+    with Timer() as t_bat:            # warm
+        batch = simulate_batch(flows, accels, link, cfg,
+                               [tbs] * len(seeds), *arr_b)
+    match = all(
+        np.array_equal(np.asarray(s.counters[k]), np.asarray(b.counters[k]))
+        for s, b in zip(serial, batch)
+        for k in ("c_adm_msgs", "c_done_msgs", "c_drops"))
+    rows.append(Row("sim_perf/batch8",
+                    us_per_tick(t_bat.s, 8 * window),
+                    dict(wall_s=t_bat.s, serial_wall_s=t_ser.s,
+                         speedup_vs_serial_x=t_ser.s / max(t_bat.s, 1e-9),
+                         cold_wall_s=t_bat_cold.s,
+                         serial_cold_wall_s=t_ser_cold.s,
+                         counters_match_serial=bool(match))))
+
+    # -- vectorized grant fast path vs sequential ------------------------
+    n_ticks_g = 4 * window
+    fl, ac, lk, cf, tg, ag = _scenario(16, n_ticks_g, shaping=SHAPING_NONE,
+                                       k_grant=8, grant_fast=True)
+    cf_seq = dataclasses.replace(cf, grant_fast=False)
+    simulate(fl, ac, lk, cf, tg, *ag)          # compile both variants
+    simulate(fl, ac, lk, cf_seq, tg, *ag)
+    with Timer() as t_fast:
+        r_fast = simulate(fl, ac, lk, cf, tg, *ag)
+    with Timer() as t_seq:
+        r_seq = simulate(fl, ac, lk, cf_seq, tg, *ag)
+    g_match = all(
+        np.array_equal(np.asarray(r_fast.counters[k]),
+                       np.asarray(r_seq.counters[k]))
+        for k in ("c_adm_msgs", "c_done_msgs", "c_drops"))
+    rows.append(Row("sim_perf/grant_vec",
+                    us_per_tick(t_fast.s, n_ticks_g),
+                    dict(seq_us_per_tick=us_per_tick(t_seq.s, n_ticks_g),
+                         speedup_x=t_seq.s / max(t_fast.s, 1e-9),
+                         counters_match_seq=bool(g_match))))
+
+    payload = {r.name.split("/", 1)[1]: dict(us_per_call=r.us_per_call,
+                                             **r.derived) for r in rows}
+    save_json("sim_perf", payload)
+    return rows

@@ -16,44 +16,60 @@ from repro.core import token_bucket as tb
 from repro.core.accelerator import AcceleratorSpec, AccelTable, CURVE_LINEAR
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
-from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals, simulate
+from repro.core.sim import (SHAPING_HW, SimConfig, gen_arrivals,
+                            simulate_batch, stack_arrivals)
 
 SLOS_GBPS = (1, 10, 100, 1000)
 
 
 def run(quick: bool = False) -> list[Row]:
     rows, payload = [], {}
+    n_ticks = 40_000 if quick else 150_000
+    # comp_cap must cover every completion in the measured window
+    # (1000 Gbps / 8KB -> ~73K completions over 4.8 ms)
+    cfg = SimConfig(n_ticks=n_ticks, shaping=SHAPING_HW,
+                    k_grant=8, k_srv=8, k_eg=8, comp_cap=1 << 17)
+    # all four rate points share the engine signature (same shapes/config,
+    # per-element accel table + link + registers + trace), so the whole
+    # sweep is one vmap-batched compiled call
+    plans, accels, links, arrs = [], [], [], []
+    # the engine consumes only routing/priority/weight from the FlowSet
+    # (identical across the four rate points — msg size and SLO only shape
+    # the per-point arrival traces and registers), so one canonical flow
+    # set serves the whole batch
+    shared_flows = FlowSet.build([
+        FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(1024, load=0.9), SLO.gbps(1.0))])
     for slo in SLOS_GBPS:
+        ours = tb.params_for_gbps(float(slo))
+        plans.append(ours)
+        # measured end-to-end (headroom on every other resource)
+        msg = 1024 if slo <= 100 else 8192
+        accels.append(AccelTable.build([
+            AcceleratorSpec("wire", peak_gbps=4 * slo, curve=CURVE_LINEAR,
+                            overhead_ns=5.0)]))
+        links.append(LinkSpec(h2d_gbps=4 * slo, d2h_gbps=4 * slo,
+                              efficiency=1.0, credits=4096))
+        spec = FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                        TrafficPattern(msg, load=0.9), SLO.gbps(slo))
+        arrs.append(gen_arrivals(FlowSet.build([spec]), cfg,
+                                 load_ref_gbps={0: 2.0 * slo}))
+    with Timer() as t:
+        results = simulate_batch(shared_flows, accels, links, cfg,
+                                 [tb.pack([p]) for p in plans],
+                                 *stack_arrivals(arrs))
+    for slo, ours, res in zip(SLOS_GBPS, plans, results):
         # paper's parameters: analytic shaped rate
         pp = tb.PAPER_TABLE2[slo]
         paper_rate = tb.achieved_rate(pp) * 8 / 1e9
-        # our planner
-        ours = tb.params_for_gbps(float(slo))
         plan_rate = tb.achieved_rate(ours) * 8 / 1e9
-        # measured end-to-end (headroom on every other resource)
-        msg = 1024 if slo <= 100 else 8192
-        accel = AcceleratorSpec("wire", peak_gbps=4 * slo,
-                                curve=CURVE_LINEAR, overhead_ns=5.0)
-        link = LinkSpec(h2d_gbps=4 * slo, d2h_gbps=4 * slo, efficiency=1.0,
-                        credits=4096)
-        spec = FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
-                        TrafficPattern(msg, load=0.9), SLO.gbps(slo))
-        flows = FlowSet.build([spec])
-        n_ticks = 40_000 if quick else 150_000
-        # comp_cap must cover every completion in the measured window
-        # (1000 Gbps / 8KB -> ~73K completions over 4.8 ms)
-        cfg = SimConfig(n_ticks=n_ticks, shaping=SHAPING_HW,
-                        k_grant=8, k_srv=8, k_eg=8, comp_cap=1 << 17)
-        arr = gen_arrivals(flows, cfg, load_ref_gbps={0: 2.0 * slo})
-        with Timer() as t:
-            res = simulate(flows, AccelTable.build([accel]), link, cfg,
-                           tb.pack([ours]), *arr)
         warm = 0.25 * res.seconds
         sel = res.comp_t_s >= warm
         meas = res.comp_sz[sel].sum() * 8 / (res.seconds - warm) / 1e9
         err = (meas - slo) / slo
         rows.append(Row(
-            f"table2/slo_{slo}gbps", us_per_tick(t.s, n_ticks),
+            f"table2/slo_{slo}gbps",
+            us_per_tick(t.s / len(SLOS_GBPS), n_ticks),
             dict(paper_params_gbps=paper_rate, planned_gbps=plan_rate,
                  measured_gbps=meas, err_pct=100 * err,
                  refill=ours.refill_rate, bkt=ours.bkt_size,

@@ -1,0 +1,723 @@
+"""Compiled dataplane engine: cached jit, donated carries, vmap batching.
+
+The cycle-accurate simulator in ``repro.core.sim`` used to close its jitted
+``lax.scan`` over every input (arrival trace, stall mask, window start, flow
+tables, link parameters), so *each* ``simulate()`` call re-traced and
+re-compiled the whole tick loop.  The control plane (``ArcusRuntime.run_managed``,
+Algorithm 1) reconfigures shaping registers every window, which made XLA
+compile time — not simulated ticks — the dominant cost.
+
+This module splits trace-time constants from runtime data:
+
+* **static** (compile-cache key): ``SimConfig`` (tick counts, queue depths,
+  shaping/arbiter mode, grant widths) plus the shapes of the flow set,
+  accelerator tables, arrival traces and stall mask;
+* **traced** (plain arguments): the arrival trace, stall mask, window start
+  ``t0``, per-flow routing/weight tables, accelerator service tables, link
+  rates, and the full carry — including the TBState parameter "registers",
+  so a live register write (Sec. 5.3.1 "Dynamism") never retraces.
+
+Compiled entry points are cached at module level (``_RUN_CACHE``); the carry
+is donated (``donate_argnums``) so window-to-window resumption reuses device
+buffers instead of copying the ~30-array carry each window.
+
+``run_window_batch`` wraps the same core in ``jax.vmap`` over a leading batch
+axis of (arrival trace, TBState registers, optionally accelerator/link
+tables), so multi-seed / multi-rate-point experiments execute as one
+compiled call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import token_bucket as tb
+from repro.core.accelerator import AccelTable, interp_grid
+from repro.core.flow import FlowSet, Path
+from repro.core.interconnect import (ARB_PRIORITY, ARB_RR, ARB_WFQ, ARB_WRR,
+                                     LinkSpec)
+
+SHAPING_NONE = 0
+SHAPING_HW = 1
+SHAPING_SW = 2
+
+INF_I32 = np.int32(2**31 - 1)
+_LCG_A = np.int32(1103515245)
+_LCG_C = np.int32(12345)
+
+
+def _own_tb(tb_state: tb.TBState) -> tb.TBState:
+    """Copy TBState leaves into engine-owned buffers.
+
+    The carry is donated to the compiled engine, so it must not alias the
+    caller's arrays (donation would invalidate them) nor alias itself
+    (``tb.init`` starts ``tokens`` as the very ``bkt_size`` buffer, and XLA
+    rejects donating one buffer twice)."""
+    return jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                  tb_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_ticks: int
+    tick_cycles: int = 8
+    clock_hz: float = 250e6
+    qlen: int = 256            # per-flow queue slots
+    aq_len: int = 256          # per-accelerator queue slots
+    aq_byte_cap: int = 1 << 20  # shared accel input buffer (bytes) — large
+                                # messages congest it (Sec. 3.1 / Fig. 8)
+    eq_len: int = 2048         # per-direction egress queue slots
+    comp_cap: int = 1 << 15    # completion record ring capacity
+    k_arr: int = 4             # max arrivals drained per flow per tick
+    k_grant: int = 4           # max arbiter grants per tick
+    k_srv: int = 2             # service starts per accelerator per tick
+    k_eg: int = 4              # egress pops per direction per tick
+    lmax: int = 16             # max accelerator lanes
+    shaping: int = SHAPING_HW
+    arbiter: int = ARB_RR
+    # software-shaping pathology model
+    sw_host_delay_cycles: int = 500      # ~2 us base host processing delay
+    sw_jitter_cycles: int = 2500         # up to +10 us heavy-tail jitter
+    # one-shot vectorized grant selection for uncontended RR ticks (falls
+    # back to the sequential argmin loop whenever semantics require it)
+    grant_fast: bool = True
+
+    @property
+    def seconds(self) -> float:
+        return self.n_ticks * self.tick_cycles / self.clock_hz
+
+
+# ---------------------------------------------------------------------------
+# Carry construction
+# ---------------------------------------------------------------------------
+
+
+def init_carry(flows: FlowSet, accels: AccelTable, cfg: SimConfig,
+               tb_state: tb.TBState) -> dict[str, Any]:
+    N, A = flows.n, accels.n
+    lanes_busy = np.zeros((A, cfg.lmax), np.float32)
+    for a in range(A):
+        lanes_busy[a, accels.parallelism[a]:] = np.float32(3e38)  # lane disabled
+    return dict(
+        # per-flow ingress queues
+        q_sz=jnp.zeros((N, cfg.qlen), jnp.int32),
+        q_at=jnp.zeros((N, cfg.qlen), jnp.int32),
+        q_head=jnp.zeros((N,), jnp.int32),
+        q_cnt=jnp.zeros((N,), jnp.int32),
+        arr_ptr=jnp.zeros((N,), jnp.int32),
+        # shaper
+        tb=_own_tb(tb_state),
+        sw_pend=jnp.zeros((N,), jnp.int32),
+        # arbiter
+        rr_ptr=jnp.zeros((), jnp.int32),
+        vft=jnp.zeros((N,), jnp.float32),
+        # link / credits
+        lres=jnp.zeros((2,), jnp.float32),
+        credits_used=jnp.zeros((), jnp.int32),
+        # accelerator queues + lanes
+        aq_sz=jnp.zeros((A, cfg.aq_len), jnp.int32),
+        aq_fl=jnp.zeros((A, cfg.aq_len), jnp.int32),
+        aq_at=jnp.zeros((A, cfg.aq_len), jnp.int32),
+        aq_head=jnp.zeros((A,), jnp.int32),
+        aq_cnt=jnp.zeros((A,), jnp.int32),
+        aq_bytes=jnp.zeros((A,), jnp.int32),
+        lanes=jnp.asarray(lanes_busy),
+        # egress queues, one per direction (0 h2d, 1 d2h, 2 off-fabric)
+        eq_sz=jnp.zeros((3, cfg.eq_len), jnp.int32),
+        eq_isz=jnp.zeros((3, cfg.eq_len), jnp.int32),  # original ingress bytes
+        eq_fl=jnp.zeros((3, cfg.eq_len), jnp.int32),
+        eq_at=jnp.zeros((3, cfg.eq_len), jnp.int32),
+        eq_rd=jnp.zeros((3, cfg.eq_len), jnp.int32),
+        eq_head=jnp.zeros((3,), jnp.int32),
+        eq_cnt=jnp.zeros((3,), jnp.int32),
+        # telemetry ("hardware counters", Arcus step 7)
+        c_adm_msgs=jnp.zeros((N,), jnp.int32),
+        # exact byte counters, split lo (20 bits) / hi to stay in int32
+        c_adm_b_lo=jnp.zeros((N,), jnp.int32),
+        c_adm_b_hi=jnp.zeros((N,), jnp.int32),
+        c_done_msgs=jnp.zeros((N,), jnp.int32),
+        c_done_b_lo=jnp.zeros((N,), jnp.int32),
+        c_done_b_hi=jnp.zeros((N,), jnp.int32),
+        c_drops=jnp.zeros((N,), jnp.int32),
+        c_lat_sum=jnp.zeros((N,), jnp.float32),
+        # completion record ring (one scratch slot at index comp_cap)
+        comp_fl=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
+        comp_lat=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
+        comp_t=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
+        comp_sz=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
+        comp_n=jnp.zeros((), jnp.int32),
+        rng=jnp.asarray(np.int32(0x1234567)),
+    )
+
+
+def reconfigure_carry(carry: dict, tb_state: tb.TBState) -> dict:
+    """Live reconfiguration: write only the parameter "registers"
+    (Refill_Rate / Bkt_Size / Interval / mode); in-flight tokens and timers
+    are hardware state and keep running."""
+    carry = dict(carry)
+    old = carry["tb"]
+    new = _own_tb(tb_state)
+    carry["tb"] = old._replace(
+        refill_rate=new.refill_rate,
+        bkt_size=new.bkt_size,
+        interval=new.interval,
+        mode=new.mode,
+        tokens=jnp.minimum(old.tokens, new.bkt_size),
+    )
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# Traced-argument packing (everything here may change without a retrace)
+# ---------------------------------------------------------------------------
+
+
+def _pack_args(flows: FlowSet, accels: AccelTable, link: LinkSpec,
+               cfg: SimConfig, arr_t, arr_sz, stall_mask,
+               t0_ticks) -> dict[str, Any]:
+    h2d_bpc, d2h_bpc = link.bytes_per_cycle()
+    args = dict(
+        arr_t=jnp.asarray(arr_t, jnp.int32),
+        arr_sz=jnp.asarray(arr_sz, jnp.int32),
+        t0=jnp.asarray(t0_ticks, jnp.int32),
+        fl_accel=jnp.asarray(flows.accel_id, jnp.int32),
+        fl_in_dir=jnp.asarray(flows.ingress_dir, jnp.int32),
+        fl_eg_dir=jnp.asarray(flows.egress_dir, jnp.int32),
+        # inline-NIC-RX delivers the full payload to the host no matter what
+        # the accelerator emits; other paths transfer the accel's output.
+        fl_eg_full=jnp.asarray(flows.path == int(Path.INLINE_NIC_RX)),
+        fl_prio=jnp.asarray(flows.priority, jnp.float32),
+        fl_w=jnp.asarray(np.maximum(flows.weight, 1e-3), jnp.float32),
+        svc_tab=jnp.asarray(accels.service_cycles, jnp.float32),
+        eg_tab=jnp.asarray(accels.egress_bytes, jnp.float32),
+        bpc=jnp.asarray([h2d_bpc, d2h_bpc], jnp.float32),
+        ovh=jnp.asarray(link.msg_overhead_bytes, jnp.float32),
+        credits=jnp.asarray(link.credits, jnp.int32),
+    )
+    if cfg.shaping == SHAPING_SW:
+        if stall_mask is None:
+            stall_mask = np.zeros(int(t0_ticks) + cfg.n_ticks, bool)
+        args["stall"] = jnp.asarray(stall_mask, bool)
+    return args
+
+
+def _args_sig(args: dict[str, Any]) -> tuple:
+    return tuple(sorted((k, v.shape) for k, v in args.items()))
+
+
+# ---------------------------------------------------------------------------
+# The tick body
+# ---------------------------------------------------------------------------
+
+#: inner pipeline-stage loops (k_arr / k_grant / k_srv / k_eg, trip counts
+#: 2-16) are unrolled into the scan body up to this bound: XLA while-loop
+#: per-iteration overhead dominates these tiny bodies on CPU.
+_UNROLL_MAX = 32
+
+
+def _fori(n: int, body, init):
+    """fori_loop that statically unrolls small trip counts."""
+    if n <= _UNROLL_MAX:
+        val = init
+        for i in range(n):
+            val = body(i, val)
+        return val
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+def _tick(cfg: SimConfig, args: dict, carry: dict, t):
+    arr_t, arr_sz = args["arr_t"], args["arr_sz"]
+    fl_accel, fl_in_dir = args["fl_accel"], args["fl_in_dir"]
+    fl_eg_dir, fl_eg_full = args["fl_eg_dir"], args["fl_eg_full"]
+    fl_prio, fl_w = args["fl_prio"], args["fl_w"]
+    svc_tab, eg_tab = args["svc_tab"], args["eg_tab"]
+    bpc, ovh, credits = args["bpc"], args["ovh"], args["credits"]
+    N = fl_accel.shape[0]
+    A = svc_tab.shape[0]
+    iota_n = jnp.arange(N, dtype=jnp.int32)
+    shaped = cfg.shaping in (SHAPING_HW, SHAPING_SW)
+
+    now = t * cfg.tick_cycles
+    now_end = now + cfg.tick_cycles
+    is_stall = (args["stall"][t] if cfg.shaping == SHAPING_SW
+                else jnp.asarray(False))
+
+    # -- 1. token-bucket timers ------------------------------------
+    if cfg.shaping == SHAPING_SW:
+        # host descheduled: refills deferred, catch up on wakeup
+        pend = carry["sw_pend"] + cfg.tick_cycles
+        elapsed = jnp.where(is_stall, 0, pend)
+        carry["sw_pend"] = jnp.where(is_stall, pend, 0)
+        carry["tb"] = tb.advance(carry["tb"], elapsed)
+    elif cfg.shaping == SHAPING_HW:
+        carry["tb"] = tb.advance(carry["tb"], cfg.tick_cycles)
+
+    # -- 2. arrivals -> per-flow queues ------------------------------
+    def arr_body(_, c):
+        ptr = c["arr_ptr"]
+        nxt_t = arr_t[iota_n, jnp.minimum(ptr, arr_t.shape[1] - 1)]
+        nxt_s = arr_sz[iota_n, jnp.minimum(ptr, arr_t.shape[1] - 1)]
+        due = jnp.logical_and(nxt_t < now_end, ptr < arr_t.shape[1])
+        room = c["q_cnt"] < cfg.qlen
+        take = jnp.logical_and(due, room)
+        drop = jnp.logical_and(due, jnp.logical_not(room))
+        slot = (c["q_head"] + c["q_cnt"]) % cfg.qlen
+        c["q_sz"] = c["q_sz"].at[iota_n, slot].set(
+            jnp.where(take, nxt_s, c["q_sz"][iota_n, slot]))
+        c["q_at"] = c["q_at"].at[iota_n, slot].set(
+            jnp.where(take, nxt_t, c["q_at"][iota_n, slot]))
+        c["q_cnt"] = c["q_cnt"] + take.astype(jnp.int32)
+        c["arr_ptr"] = ptr + jnp.logical_or(take, drop).astype(jnp.int32)
+        c["c_drops"] = c["c_drops"] + drop.astype(jnp.int32)
+        return c
+
+    carry = _fori(cfg.k_arr, arr_body, carry)
+
+    # -- 3. per-tick link budgets ------------------------------------
+    budget = bpc * cfg.tick_cycles + carry["lres"]  # [2] bytes
+
+    # -- 4. shaper + arbiter grants ----------------------------------
+    def grant_inputs(c, budget):
+        """Head-of-line state + eligibility + arbiter key per flow."""
+        head_sz = c["q_sz"][iota_n, c["q_head"]]
+        head_at = c["q_at"][iota_n, c["q_head"]]
+        have = c["q_cnt"] > 0
+        cost = tb.cost_of(c["tb"], head_sz)
+        if shaped:
+            tok_ok = c["tb"].tokens >= cost
+        else:
+            tok_ok = jnp.ones((N,), bool)
+        a_of = fl_accel
+        aq_room = jnp.logical_and(
+            c["aq_cnt"][a_of] < cfg.aq_len,
+            c["aq_bytes"][a_of] + head_sz <= cfg.aq_byte_cap)
+        cred_ok = c["credits_used"] < credits
+        # A message may start whenever the link has *any* remaining
+        # budget; it then drives the budget negative, which models its
+        # serialization time (the link stays busy / in debt until the
+        # per-tick replenishment pays it off).
+        bud_f = jnp.where(fl_in_dir == 2, jnp.float32(3e38),
+                          budget[jnp.minimum(fl_in_dir, 1)])
+        bud_ok = bud_f > 0.0
+        elig = have & tok_ok & aq_room & cred_ok & bud_ok
+        if cfg.shaping == SHAPING_SW:
+            elig = jnp.logical_and(elig, jnp.logical_not(is_stall))
+
+        # arbiter key (lower = served first)
+        rr_key = ((iota_n - c["rr_ptr"] - 1) % N).astype(jnp.float32)
+        if cfg.arbiter == ARB_RR:
+            key = rr_key
+        elif cfg.arbiter in (ARB_WRR, ARB_WFQ):
+            key = c["vft"] + 1e-6 * rr_key
+        elif cfg.arbiter == ARB_PRIORITY:
+            key = -fl_prio * 1e6 + rr_key
+        else:
+            raise ValueError(cfg.arbiter)
+        key = jnp.where(elig, key, jnp.float32(3e38))
+        return head_sz, head_at, cost, elig, key
+
+    def grant_body(_, st):
+        c, budget = st
+        head_sz, head_at, cost, elig, key = grant_inputs(c, budget)
+        g = jnp.argmin(key).astype(jnp.int32)
+        ok = elig[g]
+
+        sz = head_sz[g]
+        at = head_at[g]
+        onehot = (iota_n == g) & ok
+        # consume tokens
+        if shaped:
+            c["tb"] = c["tb"]._replace(
+                tokens=c["tb"].tokens - jnp.where(onehot, cost, 0))
+        # pop flow queue
+        c["q_head"] = (c["q_head"] + onehot) % cfg.qlen
+        c["q_cnt"] = c["q_cnt"] - onehot
+        # link budget + credits (per-message fabric overhead included)
+        dir_idx = jnp.minimum(fl_in_dir[g], 1)
+        spend = jnp.where((fl_in_dir[g] != 2) & ok,
+                          sz.astype(jnp.float32) + ovh, 0.0)
+        budget = budget.at[dir_idx].add(-spend)
+        c["credits_used"] = c["credits_used"] + ok.astype(jnp.int32)
+        # accel queue push
+        a = fl_accel[g]
+        slot = (c["aq_head"][a] + c["aq_cnt"][a]) % cfg.aq_len
+        c["aq_sz"] = c["aq_sz"].at[a, slot].set(
+            jnp.where(ok, sz, c["aq_sz"][a, slot]))
+        c["aq_fl"] = c["aq_fl"].at[a, slot].set(
+            jnp.where(ok, g, c["aq_fl"][a, slot]))
+        c["aq_at"] = c["aq_at"].at[a, slot].set(
+            jnp.where(ok, at, c["aq_at"][a, slot]))
+        c["aq_cnt"] = c["aq_cnt"].at[a].add(ok.astype(jnp.int32))
+        c["aq_bytes"] = c["aq_bytes"].at[a].add(jnp.where(ok, sz, 0))
+        # arbiter state.  WRR is message-granular (one packet per flow
+        # per round — how the paper's Host_noTS FPGA arbiter behaves,
+        # letting large messages steal bytes); WFQ is byte-granular.
+        c["rr_ptr"] = jnp.where(ok, g, c["rr_ptr"])
+        if cfg.arbiter == ARB_WRR:
+            c["vft"] = c["vft"] + jnp.where(onehot, 1.0 / fl_w, 0.0)
+        else:
+            c["vft"] = c["vft"] + jnp.where(
+                onehot, sz.astype(jnp.float32) / fl_w, 0.0)
+        # counters
+        c["c_adm_msgs"] = c["c_adm_msgs"] + onehot.astype(jnp.int32)
+        lo = c["c_adm_b_lo"] + jnp.where(onehot, sz, 0)
+        c["c_adm_b_hi"] = c["c_adm_b_hi"] + (lo >> 20)
+        c["c_adm_b_lo"] = lo & 0xFFFFF
+        return c, budget
+
+    def seq_grants(c, budget, *_aux):
+        c, budget = _fori(cfg.k_grant, grant_body, (c, budget))
+        return c, budget
+
+    use_fast = (cfg.grant_fast and cfg.arbiter == ARB_RR
+                and cfg.k_grant > 1 and N > 1)
+    if use_fast:
+        # One-shot grant selection for the common uncontended RR tick.
+        # Sorting eligible flows by the RR key visits them in exactly the
+        # cyclic order the sequential argmin loop would (each grant moves
+        # rr_ptr to the granted flow, so the next argmin is the next
+        # eligible flow after it); eligibility is monotone within a tick
+        # (budgets/credits/queues only move toward ineligibility), so the
+        # first-K selection equals the sequential one whenever
+        #   (a) every candidate passes its *cumulative* budget / credit /
+        #       accel-queue check (prefix sums below), and
+        #   (b) no flow could be granted twice (either >= k_grant flows
+        #       are eligible, or every eligible flow has a single queued
+        #       message).
+        # Any contended tick falls back to the sequential loop.
+        K = min(cfg.k_grant, N)
+        head_sz, head_at, cost, elig, key = grant_inputs(carry, budget)
+        order = jnp.argsort(key)[:K]             # candidate flows, RR order
+        valid = elig[order]                       # eligible prefix
+        vi = valid.astype(jnp.int32)
+        csz = head_sz[order]
+        cat = head_at[order]
+        ccost = cost[order]
+        cdir = fl_in_dir[order]
+        d01 = jnp.minimum(cdir, 1)
+        cacc = fl_accel[order]
+        spend = jnp.where((cdir != 2) & valid,
+                          csz.astype(jnp.float32) + ovh, 0.0)
+        lt_i = jnp.tril(jnp.ones((K, K), jnp.int32), -1)   # [j, i]: i < j
+        lt_f = lt_i.astype(jnp.float32)
+        same_dir = (d01[None, :] == d01[:, None])
+        cum_spend = (lt_f * same_dir.astype(jnp.float32)) @ spend
+        bud_ok = (cdir == 2) | (budget[d01] - cum_spend > 0.0)
+        same_acc = (cacc[None, :] == cacc[:, None]).astype(jnp.int32)
+        cnt_before = (lt_i * same_acc) @ vi
+        byt_before = (lt_i * same_acc) @ jnp.where(valid, csz, 0)
+        aq_ok = ((carry["aq_cnt"][cacc] + cnt_before < cfg.aq_len)
+                 & (carry["aq_bytes"][cacc] + byt_before + csz
+                    <= cfg.aq_byte_cap))
+        idx_before = lt_i @ vi
+        cred_ok = carry["credits_used"] + idx_before < credits
+        ok_all = jnp.all(~valid | (bud_ok & aq_ok & cred_ok))
+        n_elig = jnp.sum(elig.astype(jnp.int32))
+        regrant_safe = ((n_elig >= cfg.k_grant)
+                        | jnp.all(~elig | (carry["q_cnt"] <= 1)))
+        fast_pred = ok_all & regrant_safe
+
+        # Under vmap (run_window_batch) this cond lowers to a select that
+        # evaluates BOTH branches per lane.  That waste is accepted on
+        # purpose: batched and serial runs then share the exact per-lane
+        # computation, which is what guarantees simulate_batch() counters
+        # bitwise-match serial simulate() — stripping the fast path from
+        # batch engines would instead rely on fast==sequential holding to
+        # the last float ulp.  Callers who want a leaner batch engine can
+        # set SimConfig.grant_fast=False on both sides.
+        def vec_grants(c, budget, order, valid, vi, csz, cat, ccost,
+                       cdir, d01, cacc, spend, cnt_before):
+            if shaped:
+                c["tb"] = c["tb"]._replace(
+                    tokens=c["tb"].tokens.at[order].add(
+                        -jnp.where(valid, ccost, 0)))
+            c["q_head"] = (c["q_head"]
+                           + jnp.zeros((N,), jnp.int32).at[order].add(vi)) \
+                % cfg.qlen
+            c["q_cnt"] = c["q_cnt"] - jnp.zeros((N,), jnp.int32) \
+                .at[order].add(vi)
+            budget = budget - jnp.zeros((2,), jnp.float32).at[d01].add(spend)
+            n_g = jnp.sum(vi)
+            c["credits_used"] = c["credits_used"] + n_g
+            slot = (c["aq_head"][cacc] + c["aq_cnt"][cacc] + cnt_before) \
+                % cfg.aq_len
+            row = jnp.where(valid, cacc, A)       # OOB rows are dropped
+            c["aq_sz"] = c["aq_sz"].at[row, slot].set(csz, mode="drop")
+            c["aq_fl"] = c["aq_fl"].at[row, slot].set(order, mode="drop")
+            c["aq_at"] = c["aq_at"].at[row, slot].set(cat, mode="drop")
+            c["aq_cnt"] = c["aq_cnt"].at[cacc].add(vi)
+            c["aq_bytes"] = c["aq_bytes"].at[cacc].add(
+                jnp.where(valid, csz, 0))
+            c["rr_ptr"] = jnp.where(
+                n_g > 0, order[jnp.maximum(n_g - 1, 0)], c["rr_ptr"])
+            c["vft"] = c["vft"].at[order].add(
+                jnp.where(valid, csz.astype(jnp.float32) / fl_w[order], 0.0))
+            c["c_adm_msgs"] = c["c_adm_msgs"].at[order].add(vi)
+            lo = c["c_adm_b_lo"].at[order].add(jnp.where(valid, csz, 0))
+            c["c_adm_b_hi"] = c["c_adm_b_hi"] + (lo >> 20)
+            c["c_adm_b_lo"] = lo & 0xFFFFF
+            return c, budget
+
+        carry, budget = jax.lax.cond(
+            fast_pred, vec_grants, seq_grants,
+            carry, budget, order, valid, vi, csz, cat, ccost,
+            cdir, d01, cacc, spend, cnt_before)
+    else:
+        carry, budget = seq_grants(carry, budget)
+
+    # -- 5. accelerator service (one accel per iteration) -------------
+    def srv_body(i, c):
+        a = i % A
+        lanes_a = c["lanes"][a]
+        lane = jnp.argmin(lanes_a).astype(jnp.int32)
+        # a lane that frees during this tick may chain back-to-back
+        # (no tick-quantization idle gap between messages)
+        free = lanes_a[lane] < jnp.float32(now_end)
+        ok = free & (c["aq_cnt"][a] > 0)
+        h = c["aq_head"][a]
+        sz = c["aq_sz"][a, h]
+        fl = c["aq_fl"][a, h]
+        at = c["aq_at"][a, h]
+        svc = interp_grid(svc_tab, a, sz.astype(jnp.float32))
+        esz = interp_grid(eg_tab, a, sz.astype(jnp.float32))
+        esz = jnp.where(fl_eg_full[fl], sz.astype(jnp.float32), esz)
+        end = jnp.maximum(lanes_a[lane], jnp.float32(now)) + svc
+        c["lanes"] = c["lanes"].at[a, lane].set(
+            jnp.where(ok, end, lanes_a[lane]))
+        c["aq_head"] = c["aq_head"].at[a].add(ok.astype(jnp.int32)) \
+            % cfg.aq_len
+        c["aq_cnt"] = c["aq_cnt"].at[a].add(-ok.astype(jnp.int32))
+        c["aq_bytes"] = c["aq_bytes"].at[a].add(jnp.where(ok, -sz, 0))
+        # host-processing delay (software-mediated shaping only)
+        if cfg.shaping == SHAPING_SW:
+            r = c["rng"] * _LCG_A + _LCG_C
+            c["rng"] = r
+            u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
+            hostd = cfg.sw_host_delay_cycles + (u ** 4) * cfg.sw_jitter_cycles
+        else:
+            hostd = jnp.float32(0.0)
+        ready = (end + hostd).astype(jnp.int32)
+        # egress queue push
+        d = fl_eg_dir[fl]
+        slot = (c["eq_head"][d] + c["eq_cnt"][d]) % cfg.eq_len
+        full = c["eq_cnt"][d] >= cfg.eq_len
+        okq = ok & jnp.logical_not(full)
+        c["eq_sz"] = c["eq_sz"].at[d, slot].set(
+            jnp.where(okq, jnp.maximum(esz.astype(jnp.int32), 1),
+                      c["eq_sz"][d, slot]))
+        c["eq_isz"] = c["eq_isz"].at[d, slot].set(
+            jnp.where(okq, sz, c["eq_isz"][d, slot]))
+        c["eq_fl"] = c["eq_fl"].at[d, slot].set(
+            jnp.where(okq, fl, c["eq_fl"][d, slot]))
+        c["eq_at"] = c["eq_at"].at[d, slot].set(
+            jnp.where(okq, at, c["eq_at"][d, slot]))
+        c["eq_rd"] = c["eq_rd"].at[d, slot].set(
+            jnp.where(okq, ready, c["eq_rd"][d, slot]))
+        c["eq_cnt"] = c["eq_cnt"].at[d].add(okq.astype(jnp.int32))
+        return c
+
+    carry = _fori(A * cfg.k_srv, srv_body, carry)
+
+    # -- 6. egress link + completions ----------------------------------
+    dirs = jnp.arange(3, dtype=jnp.int32)
+
+    def eg_body(_, st):
+        c, budget = st
+        h = c["eq_head"]                       # [3]
+        sz = c["eq_sz"][dirs, h]
+        isz = c["eq_isz"][dirs, h]
+        fl = c["eq_fl"][dirs, h]
+        at = c["eq_at"][dirs, h]
+        rd = c["eq_rd"][dirs, h]
+        have = c["eq_cnt"] > 0
+        ready = rd < now_end
+        bud3 = jnp.concatenate([budget, jnp.asarray([3e38], jnp.float32)])
+        bud_ok = bud3[dirs] > 0.0
+        pop = have & ready & bud_ok            # [3]
+        c["eq_head"] = (c["eq_head"] + pop) % cfg.eq_len
+        c["eq_cnt"] = c["eq_cnt"] - pop
+        spend = jnp.where(pop[:2], sz[:2].astype(jnp.float32) + ovh, 0.0)
+        budget = budget - spend
+        c["credits_used"] = c["credits_used"] - pop.sum().astype(jnp.int32)
+        # completion = transfer start + own serialization delay
+        ser = jnp.where(dirs < 2,
+                        sz.astype(jnp.float32) / bpc[jnp.minimum(dirs, 1)],
+                        0.0)
+        comp_time = jnp.maximum(rd, now) + ser.astype(jnp.int32)
+        lat = comp_time - at
+        # record (scratch slot comp_cap for non-pops)
+        base = c["comp_n"]
+        offs = jnp.cumsum(pop.astype(jnp.int32)) - pop.astype(jnp.int32)
+        idx = jnp.where(pop, (base + offs) % cfg.comp_cap, cfg.comp_cap)
+        c["comp_fl"] = c["comp_fl"].at[idx].set(fl)
+        c["comp_lat"] = c["comp_lat"].at[idx].set(lat)
+        c["comp_t"] = c["comp_t"].at[idx].set(comp_time)
+        c["comp_sz"] = c["comp_sz"].at[idx].set(isz)
+        c["comp_n"] = base + pop.sum().astype(jnp.int32)
+        # per-flow counters (SLO accounting is on ingress payload bytes,
+        # as the paper's traffic generator measures); scatter-adds
+        # accumulate duplicate flow ids across the three directions.
+        c["c_done_msgs"] = c["c_done_msgs"].at[fl].add(pop.astype(jnp.int32))
+        lo = c["c_done_b_lo"].at[fl].add(jnp.where(pop, isz, 0))
+        c["c_done_b_hi"] = c["c_done_b_hi"] + (lo >> 20)
+        c["c_done_b_lo"] = lo & 0xFFFFF
+        c["c_lat_sum"] = c["c_lat_sum"].at[fl].add(
+            jnp.where(pop, lat.astype(jnp.float32), 0.0))
+        return c, budget
+
+    carry, budget = _fori(cfg.k_eg, eg_body, (carry, budget))
+
+    # Positive leftover budget is lost (a link cannot save idle time);
+    # negative budget (serialization debt of in-flight messages) carries.
+    carry["lres"] = jnp.minimum(budget, 0.0)
+    return carry
+
+
+def _run_core(cfg: SimConfig, carry: dict, args: dict) -> dict:
+    xs = args["t0"] + jnp.arange(cfg.n_ticks, dtype=jnp.int32)
+    carry, _ = jax.lax.scan(lambda c, t: (_tick(cfg, args, c, t), None),
+                            carry, xs)
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# Module-level compile cache
+# ---------------------------------------------------------------------------
+
+_RUN_CACHE: dict[Any, Any] = {}
+_CACHE_MAX = 64     # profiler sweeps can touch many context shapes; evict
+                    # oldest engines (FIFO) so a long-lived control plane
+                    # does not accumulate compiled executables unboundedly
+
+
+def _get_run(key, builder):
+    fn = _RUN_CACHE.get(key)
+    if fn is None:
+        if len(_RUN_CACHE) >= _CACHE_MAX:
+            _RUN_CACHE.pop(next(iter(_RUN_CACHE)))
+        fn = builder()
+        _RUN_CACHE[key] = fn
+    return fn
+
+
+def cache_info() -> dict[str, int]:
+    """Compile-cache stats: distinct engine signatures + live XLA traces.
+
+    ``traces`` counts actual jit-cache entries across all cached engines —
+    a steady value across repeated ``simulate()`` / ``run_managed`` windows
+    proves zero recompiles.  ``_cache_size`` is a private jit attribute
+    (present in the pinned jax; see requirements-dev.txt) — if a future
+    jax drops it we degrade to one trace per entry rather than raising."""
+    return {"entries": len(_RUN_CACHE),
+            "traces": sum(getattr(f, "_cache_size", lambda: 1)()
+                          for f in _RUN_CACHE.values())}
+
+
+def cache_clear() -> None:
+    _RUN_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def run_window(flows: FlowSet, accels: AccelTable, link: LinkSpec,
+               cfg: SimConfig, tb_state: tb.TBState, arr_t, arr_sz,
+               stall_mask=None, *, t0_ticks: int = 0,
+               carry: dict | None = None) -> dict:
+    """Run one compiled window; returns the raw device carry.
+
+    The input carry is **donated**: device buffers are reused in place, so
+    do not touch a carry after passing it back in (hand the returned one
+    forward instead, as ``ArcusRuntime.run_managed`` does)."""
+    args = _pack_args(flows, accels, link, cfg, arr_t, arr_sz, stall_mask,
+                      t0_ticks)
+    if carry is None:
+        carry = init_carry(flows, accels, cfg, tb_state)
+    else:
+        carry = reconfigure_carry(carry, tb_state)
+    key = ("single", cfg, _args_sig(args))
+    run = _get_run(key, lambda: jax.jit(
+        functools.partial(_run_core, cfg), donate_argnums=(0,)))
+    return run(carry, args)
+
+
+def run_window_batch(flows: FlowSet,
+                     accels: AccelTable | Sequence[AccelTable],
+                     link: LinkSpec | Sequence[LinkSpec],
+                     cfg: SimConfig, tb_states: Sequence[tb.TBState],
+                     arr_t, arr_sz, stall_mask=None, *,
+                     t0_ticks: int = 0) -> dict:
+    """Run B independent windows in one compiled ``jax.vmap`` call.
+
+    Batched per element: arrival trace, TBState registers, and (optionally,
+    when sequences are passed) accelerator tables and link specs.  Shared:
+    flow set shape/routing, SimConfig, window start, and — unless a [B, T]
+    array is given — the stall mask.  Returns the raw batched carry."""
+    arr_t = np.asarray(arr_t)
+    arr_sz = np.asarray(arr_sz)
+    if arr_t.ndim != 3:
+        raise ValueError(
+            f"arr_t must be [B, N, M] (got ndim={arr_t.ndim}) — "
+            "see stack_arrivals()")
+    B = arr_t.shape[0]
+    accels_l = list(accels) if isinstance(accels, (list, tuple)) \
+        else [accels] * B
+    links_l = list(link) if isinstance(link, (list, tuple)) else [link] * B
+    if not (len(accels_l) == B and len(links_l) == B
+            and len(tb_states) == B):
+        raise ValueError(
+            f"batch size mismatch: arr_t has B={B} but "
+            f"accels={len(accels_l)}, links={len(links_l)}, "
+            f"tb_states={len(tb_states)}")
+
+    accel_batched = isinstance(accels, (list, tuple))
+    link_batched = isinstance(link, (list, tuple))
+    stall_batched = (stall_mask is not None
+                     and np.asarray(stall_mask).ndim == 2)
+
+    # pack with tiny placeholders for the per-element entries (the real
+    # batched trace / stall arrays replace them below) so a multi-megabyte
+    # single-element trace is never uploaded just to be discarded
+    ph = np.zeros((arr_t.shape[1], 1), np.int32)
+    args = _pack_args(flows, accels_l[0], links_l[0], cfg,
+                      ph, ph, np.zeros(1, bool), t0_ticks)
+    axes = {k: None for k in args}
+    args["arr_t"] = jnp.asarray(arr_t, jnp.int32)
+    args["arr_sz"] = jnp.asarray(arr_sz, jnp.int32)
+    axes["arr_t"] = axes["arr_sz"] = 0
+    if accel_batched:
+        args["svc_tab"] = jnp.stack(
+            [jnp.asarray(a.service_cycles, jnp.float32) for a in accels_l])
+        args["eg_tab"] = jnp.stack(
+            [jnp.asarray(a.egress_bytes, jnp.float32) for a in accels_l])
+        axes["svc_tab"] = axes["eg_tab"] = 0
+    if link_batched:
+        args["bpc"] = jnp.asarray([l.bytes_per_cycle() for l in links_l],
+                                  jnp.float32)
+        args["ovh"] = jnp.asarray(
+            [l.msg_overhead_bytes for l in links_l], jnp.float32)
+        args["credits"] = jnp.asarray([l.credits for l in links_l], jnp.int32)
+        axes["bpc"] = axes["ovh"] = axes["credits"] = 0
+    if cfg.shaping == SHAPING_SW:
+        if stall_mask is None:
+            stall_mask = np.zeros(int(t0_ticks) + cfg.n_ticks, bool)
+        args["stall"] = jnp.asarray(stall_mask, bool)
+        axes["stall"] = 0 if stall_batched else None
+
+    carries = [init_carry(flows, accels_l[b], cfg, tb_states[b])
+               for b in range(B)]
+    carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+
+    key = ("batch", cfg, B, _args_sig(args),
+           tuple(sorted(axes.items())))
+    run = _get_run(key, lambda: jax.jit(
+        jax.vmap(functools.partial(_run_core, cfg), in_axes=(0, axes)),
+        donate_argnums=(0,)))
+    return run(carry, args)

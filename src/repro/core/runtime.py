@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import token_bucket as tb
@@ -110,6 +111,13 @@ class ArcusRuntime:
                     sim_kwargs: dict[str, Any] | None = None):
         """Run the dataplane with periodic SLO management.
 
+        Every window runs the same compiled engine: the static signature
+        (SimConfig + shapes) is identical across windows, so windows 1..W-1
+        are pure cache hits — register writes, path changes and the rolling
+        carry are all traced arguments.  The carry is donated to the engine
+        each window (device buffers are reused in place, never copied back
+        to the host between windows).
+
         Returns (SimResult of the last window — containing the full
         completion history ring — and the list of WindowReports)."""
         flows = self._flowset()
@@ -121,7 +129,9 @@ class ArcusRuntime:
         if arrivals is None:
             arrivals = gen_arrivals(flows, full_cfg, seed=seed,
                                     load_ref_gbps=load_ref_gbps)
-        arr_t, arr_sz = arrivals
+        # place the full-horizon trace on device once; per-window calls
+        # then pass the same committed buffers (no host->device copies)
+        arr_t, arr_sz = (jnp.asarray(a) for a in arrivals)
         carry = None
         reports: list[WindowReport] = []
         result = None

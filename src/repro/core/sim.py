@@ -13,6 +13,12 @@ paper's hardware measures (per-flow counters, completion latencies) is
 accumulated in the scan carry so the control plane can read it back, exactly
 like the paper's MMIO counter reads.
 
+The compiled tick loop itself lives in ``repro.core.engine``: a module-level
+cache of jitted scans keyed on the static (SimConfig, shapes) signature, with
+the carry donated between windows and a ``jax.vmap`` batch entry point.  This
+module keeps the host-side surface: trace generation, result collection, and
+the ``simulate`` / ``simulate_batch`` entry points.
+
 Shaping modes:
   SHAPING_NONE — no traffic shaping (Host_noTS / Bypassed_noTS_panic)
   SHAPING_HW   — Arcus: cycle-accurate token buckets in 'hardware'
@@ -26,56 +32,20 @@ Shaping modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core import token_bucket as tb
-from repro.core.accelerator import AccelTable, interp_grid
+from repro.core.accelerator import AccelTable
+from repro.core.engine import (INF_I32, SHAPING_HW,  # noqa: F401 (re-export)
+                               SHAPING_NONE, SHAPING_SW, SimConfig)
 from repro.core.flow import FlowSet
-from repro.core.interconnect import (ARB_PRIORITY, ARB_RR, ARB_WFQ, ARB_WRR,
-                                     LinkSpec, arbiter_weights)
-
-SHAPING_NONE = 0
-SHAPING_HW = 1
-SHAPING_SW = 2
-
-INF_I32 = np.int32(2**31 - 1)
-_LCG_A = np.int32(1103515245)
-_LCG_C = np.int32(12345)
-
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    n_ticks: int
-    tick_cycles: int = 8
-    clock_hz: float = 250e6
-    qlen: int = 256            # per-flow queue slots
-    aq_len: int = 256          # per-accelerator queue slots
-    aq_byte_cap: int = 1 << 20  # shared accel input buffer (bytes) — large
-                                # messages congest it (Sec. 3.1 / Fig. 8)
-    eq_len: int = 2048         # per-direction egress queue slots
-    comp_cap: int = 1 << 15    # completion record ring capacity
-    k_arr: int = 4             # max arrivals drained per flow per tick
-    k_grant: int = 4           # max arbiter grants per tick
-    k_srv: int = 2             # service starts per accelerator per tick
-    k_eg: int = 4              # egress pops per direction per tick
-    lmax: int = 16             # max accelerator lanes
-    shaping: int = SHAPING_HW
-    arbiter: int = ARB_RR
-    # software-shaping pathology model
-    sw_host_delay_cycles: int = 500      # ~2 us base host processing delay
-    sw_jitter_cycles: int = 2500         # up to +10 us heavy-tail jitter
-
-    @property
-    def seconds(self) -> float:
-        return self.n_ticks * self.tick_cycles / self.clock_hz
-
+from repro.core.interconnect import LinkSpec
 
 # ---------------------------------------------------------------------------
-# Arrival-trace generation (host side, numpy)
+# Arrival-trace generation (host side, numpy — vectorized over flows)
 # ---------------------------------------------------------------------------
 
 
@@ -90,40 +60,73 @@ def gen_arrivals(flows: FlowSet, cfg: SimConfig, *, seed: int = 0,
     rng = np.random.default_rng(seed)
     horizon_cycles = cfg.n_ticks * cfg.tick_cycles
     horizon_s = horizon_cycles / cfg.clock_hz
-    per_flow_t, per_flow_s = [], []
-    for i, spec in enumerate(flows.specs):
-        pat = spec.pattern
-        ref = (load_ref_gbps or {}).get(i, 32.0)
-        rate = pat.rate_msgs_per_sec(ref)
-        m = int(min(max_msgs, np.ceil(rate * horizon_s) + 16))
-        if pat.process == "cbr":
-            gaps = np.full(m, 1.0 / max(rate, 1e-9))
-        elif pat.process == "poisson":
-            gaps = rng.exponential(1.0 / max(rate, 1e-9), m)
-        elif pat.process == "onoff":
-            period = pat.burst_len / max(rate, 1e-9)
-            on_gap = pat.duty * period / pat.burst_len
-            gaps = np.full(m, on_gap)
-            # idle gap closes each burst so the average rate stays `rate`
-            gaps[pat.burst_len - 1::pat.burst_len] = (1 - pat.duty) * period + on_gap
-        else:
-            raise ValueError(pat.process)
-        t = np.cumsum(gaps) * cfg.clock_hz
-        sizes = np.full(m, pat.msg_bytes, np.int64)
-        if pat.p2 > 0:
-            mask = rng.random(m) < pat.p2
-            sizes[mask] = pat.msg_bytes2
-        valid = t < horizon_cycles
-        t, sizes = t[valid], sizes[valid]
-        per_flow_t.append(t.astype(np.int64))
-        per_flow_s.append(sizes)
-    M = max(1, max(len(t) for t in per_flow_t))
-    times = np.full((flows.n, M), INF_I32, np.int32)
-    szs = np.zeros((flows.n, M), np.int32)
-    for i, (t, s) in enumerate(zip(per_flow_t, per_flow_s)):
-        times[i, :len(t)] = np.minimum(t, INF_I32 - 1)
-        szs[i, :len(s)] = s
+    N = flows.n
+    pats = [s.pattern for s in flows.specs]
+    refs = np.array([(load_ref_gbps or {}).get(i, 32.0) for i in range(N)])
+    rates = np.array([max(p.rate_msgs_per_sec(r), 1e-9)
+                      for p, r in zip(pats, refs)])
+    # dense [N, M0] generation sized by the fastest flow: slow rows draw
+    # more randomness than their m_i needs, but flow counts here are small
+    # (tens) and M0 is capped by max_msgs, so the vectorization win
+    # dominates the over-draw
+    ms = np.minimum(max_msgs,
+                    np.ceil(rates * horizon_s) + 16).astype(np.int64)
+    M0 = int(max(1, ms.max()))
+    col = np.arange(M0)
+
+    procs = np.array([p.process for p in pats])
+    unknown = set(procs) - {"cbr", "poisson", "onoff"}
+    if unknown:
+        raise ValueError(unknown.pop())
+    gaps = np.empty((N, M0))
+    is_cbr = procs == "cbr"
+    is_poi = procs == "poisson"
+    is_onoff = procs == "onoff"
+    if is_cbr.any():
+        gaps[is_cbr] = 1.0 / rates[is_cbr, None]
+    if is_poi.any():
+        gaps[is_poi] = rng.exponential(1.0, (int(is_poi.sum()), M0)) \
+            / rates[is_poi, None]
+    if is_onoff.any():
+        bl = np.array([p.burst_len for p in pats])[is_onoff, None]
+        duty = np.array([p.duty for p in pats])[is_onoff, None]
+        period = bl / rates[is_onoff, None]
+        on_gap = duty * period / bl
+        # idle gap closes each burst so the average rate stays `rate`
+        idle = (col[None, :] % bl) == bl - 1
+        gaps[is_onoff] = on_gap + idle * (1 - duty) * period
+
+    t = np.cumsum(gaps, axis=1) * cfg.clock_hz
+    sizes = np.broadcast_to(
+        np.array([p.msg_bytes for p in pats], np.int64)[:, None],
+        (N, M0)).copy()
+    p2 = np.array([p.p2 for p in pats])
+    bim = p2 > 0
+    if bim.any():
+        mask = rng.random((int(bim.sum()), M0)) < p2[bim, None]
+        sz2 = np.array([p.msg_bytes2 for p in pats], np.int64)[bim, None]
+        sizes[bim] = np.where(mask, np.broadcast_to(sz2, mask.shape),
+                              sizes[bim])
+
+    valid = (t < horizon_cycles) & (col[None, :] < ms[:, None])
+    M = int(max(1, valid.sum(axis=1).max()))
+    times = np.where(valid, np.minimum(t, INF_I32 - 1), INF_I32) \
+        .astype(np.int32)[:, :M]
+    szs = np.where(valid, sizes, 0).astype(np.int32)[:, :M]
     return times, szs
+
+
+def stack_arrivals(arrs: list[tuple[np.ndarray, np.ndarray]]
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a list of (times, sizes) traces to a common length and stack to
+    [B, N, M] for ``simulate_batch``."""
+    M = max(t.shape[1] for t, _ in arrs)
+    times = np.full((len(arrs), arrs[0][0].shape[0], M), INF_I32, np.int32)
+    sizes = np.zeros_like(times)
+    for b, (t, s) in enumerate(arrs):
+        times[b, :, :t.shape[1]] = t
+        sizes[b, :, :s.shape[1]] = s
+    return times, sizes
 
 
 def gen_stall_mask(cfg: SimConfig, *, seed: int = 1,
@@ -152,325 +155,7 @@ def gen_stall_mask(cfg: SimConfig, *, seed: int = 1,
 
 
 # ---------------------------------------------------------------------------
-# Carry construction
-# ---------------------------------------------------------------------------
-
-
-def _init_carry(flows: FlowSet, accels: AccelTable, cfg: SimConfig,
-                tb_state: tb.TBState) -> dict[str, Any]:
-    N, A = flows.n, accels.n
-    lanes_busy = np.zeros((A, cfg.lmax), np.float32)
-    for a in range(A):
-        lanes_busy[a, accels.parallelism[a]:] = np.float32(3e38)  # lane disabled
-    return dict(
-        # per-flow ingress queues
-        q_sz=jnp.zeros((N, cfg.qlen), jnp.int32),
-        q_at=jnp.zeros((N, cfg.qlen), jnp.int32),
-        q_head=jnp.zeros((N,), jnp.int32),
-        q_cnt=jnp.zeros((N,), jnp.int32),
-        arr_ptr=jnp.zeros((N,), jnp.int32),
-        # shaper
-        tb=tb_state,
-        sw_pend=jnp.zeros((N,), jnp.int32),
-        # arbiter
-        rr_ptr=jnp.zeros((), jnp.int32),
-        vft=jnp.zeros((N,), jnp.float32),
-        # link / credits
-        lres=jnp.zeros((2,), jnp.float32),
-        credits_used=jnp.zeros((), jnp.int32),
-        # accelerator queues + lanes
-        aq_sz=jnp.zeros((A, cfg.aq_len), jnp.int32),
-        aq_fl=jnp.zeros((A, cfg.aq_len), jnp.int32),
-        aq_at=jnp.zeros((A, cfg.aq_len), jnp.int32),
-        aq_head=jnp.zeros((A,), jnp.int32),
-        aq_cnt=jnp.zeros((A,), jnp.int32),
-        aq_bytes=jnp.zeros((A,), jnp.int32),
-        lanes=jnp.asarray(lanes_busy),
-        # egress queues, one per direction (0 h2d, 1 d2h, 2 off-fabric)
-        eq_sz=jnp.zeros((3, cfg.eq_len), jnp.int32),
-        eq_isz=jnp.zeros((3, cfg.eq_len), jnp.int32),  # original ingress bytes
-        eq_fl=jnp.zeros((3, cfg.eq_len), jnp.int32),
-        eq_at=jnp.zeros((3, cfg.eq_len), jnp.int32),
-        eq_rd=jnp.zeros((3, cfg.eq_len), jnp.int32),
-        eq_head=jnp.zeros((3,), jnp.int32),
-        eq_cnt=jnp.zeros((3,), jnp.int32),
-        # telemetry ("hardware counters", Arcus step 7)
-        c_adm_msgs=jnp.zeros((N,), jnp.int32),
-        # exact byte counters, split lo (20 bits) / hi to stay in int32
-        c_adm_b_lo=jnp.zeros((N,), jnp.int32),
-        c_adm_b_hi=jnp.zeros((N,), jnp.int32),
-        c_done_msgs=jnp.zeros((N,), jnp.int32),
-        c_done_b_lo=jnp.zeros((N,), jnp.int32),
-        c_done_b_hi=jnp.zeros((N,), jnp.int32),
-        c_drops=jnp.zeros((N,), jnp.int32),
-        c_lat_sum=jnp.zeros((N,), jnp.float32),
-        # completion record ring (one scratch slot at index comp_cap)
-        comp_fl=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
-        comp_lat=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
-        comp_t=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
-        comp_sz=jnp.zeros((cfg.comp_cap + 1,), jnp.int32),
-        comp_n=jnp.zeros((), jnp.int32),
-        rng=jnp.asarray(np.int32(0x1234567)),
-    )
-
-
-# ---------------------------------------------------------------------------
-# The tick body
-# ---------------------------------------------------------------------------
-
-
-def _make_tick_fn(flows: FlowSet, accels: AccelTable, link: LinkSpec,
-                  cfg: SimConfig, arr_t, arr_sz, stall):
-    from repro.core.flow import Path
-    N, A = flows.n, accels.n
-    fl_accel = jnp.asarray(flows.accel_id)
-    fl_in_dir = jnp.asarray(flows.ingress_dir)
-    fl_eg_dir = jnp.asarray(flows.egress_dir)
-    # inline-NIC-RX delivers the full payload to the host no matter what the
-    # accelerator emits; other paths transfer the accelerator's output.
-    fl_eg_full = jnp.asarray(flows.path == int(Path.INLINE_NIC_RX))
-    ovh = jnp.float32(link.msg_overhead_bytes)
-    fl_prio = jnp.asarray(flows.priority)
-    fl_w = jnp.asarray(np.maximum(flows.weight, 1e-3))
-    svc_tab = jnp.asarray(accels.service_cycles)
-    eg_tab = jnp.asarray(accels.egress_bytes)
-    h2d_bpc, d2h_bpc = link.bytes_per_cycle()
-    bpc = jnp.asarray([h2d_bpc, d2h_bpc], jnp.float32)
-    iota_n = jnp.arange(N, dtype=jnp.int32)
-    shaped = cfg.shaping in (SHAPING_HW, SHAPING_SW)
-
-    def tick(carry, t):
-        now = t * cfg.tick_cycles
-        now_end = now + cfg.tick_cycles
-        is_stall = stall[t] if cfg.shaping == SHAPING_SW else jnp.asarray(False)
-
-        # -- 1. token-bucket timers ------------------------------------
-        if cfg.shaping == SHAPING_SW:
-            # host descheduled: refills deferred, catch up on wakeup
-            pend = carry["sw_pend"] + cfg.tick_cycles
-            elapsed = jnp.where(is_stall, 0, pend)
-            carry["sw_pend"] = jnp.where(is_stall, pend, 0)
-            carry["tb"] = tb.advance(carry["tb"], elapsed)
-        elif cfg.shaping == SHAPING_HW:
-            carry["tb"] = tb.advance(carry["tb"], cfg.tick_cycles)
-
-        # -- 2. arrivals -> per-flow queues ------------------------------
-        def arr_body(_, c):
-            ptr = c["arr_ptr"]
-            nxt_t = arr_t[iota_n, jnp.minimum(ptr, arr_t.shape[1] - 1)]
-            nxt_s = arr_sz[iota_n, jnp.minimum(ptr, arr_t.shape[1] - 1)]
-            due = jnp.logical_and(nxt_t < now_end, ptr < arr_t.shape[1])
-            room = c["q_cnt"] < cfg.qlen
-            take = jnp.logical_and(due, room)
-            drop = jnp.logical_and(due, jnp.logical_not(room))
-            slot = (c["q_head"] + c["q_cnt"]) % cfg.qlen
-            c["q_sz"] = c["q_sz"].at[iota_n, slot].set(
-                jnp.where(take, nxt_s, c["q_sz"][iota_n, slot]))
-            c["q_at"] = c["q_at"].at[iota_n, slot].set(
-                jnp.where(take, nxt_t, c["q_at"][iota_n, slot]))
-            c["q_cnt"] = c["q_cnt"] + take.astype(jnp.int32)
-            c["arr_ptr"] = ptr + jnp.logical_or(take, drop).astype(jnp.int32)
-            c["c_drops"] = c["c_drops"] + drop.astype(jnp.int32)
-            return c
-
-        carry = jax.lax.fori_loop(0, cfg.k_arr, arr_body, carry)
-
-        # -- 3. per-tick link budgets ------------------------------------
-        budget = bpc * cfg.tick_cycles + carry["lres"]  # [2] bytes
-
-        # -- 4. shaper + arbiter grants ----------------------------------
-        def grant_body(_, st):
-            c, budget = st
-            head_sz = c["q_sz"][iota_n, c["q_head"]]
-            head_at = c["q_at"][iota_n, c["q_head"]]
-            have = c["q_cnt"] > 0
-            cost = tb.cost_of(c["tb"], head_sz)
-            if shaped:
-                tok_ok = c["tb"].tokens >= cost
-            else:
-                tok_ok = jnp.ones((N,), bool)
-            a_of = fl_accel
-            aq_room = jnp.logical_and(
-                c["aq_cnt"][a_of] < cfg.aq_len,
-                c["aq_bytes"][a_of] + head_sz <= cfg.aq_byte_cap)
-            cred_ok = c["credits_used"] < link.credits
-            # A message may start whenever the link has *any* remaining
-            # budget; it then drives the budget negative, which models its
-            # serialization time (the link stays busy / in debt until the
-            # per-tick replenishment pays it off).
-            bud_f = jnp.where(fl_in_dir == 2, jnp.float32(3e38),
-                              budget[jnp.minimum(fl_in_dir, 1)])
-            bud_ok = bud_f > 0.0
-            elig = have & tok_ok & aq_room & cred_ok & bud_ok
-            if cfg.shaping == SHAPING_SW:
-                elig = jnp.logical_and(elig, jnp.logical_not(is_stall))
-
-            # arbiter key (lower = served first)
-            rr_key = ((iota_n - c["rr_ptr"] - 1) % N).astype(jnp.float32)
-            if cfg.arbiter == ARB_RR:
-                key = rr_key
-            elif cfg.arbiter in (ARB_WRR, ARB_WFQ):
-                key = c["vft"] + 1e-6 * rr_key
-            elif cfg.arbiter == ARB_PRIORITY:
-                key = -fl_prio.astype(jnp.float32) * 1e6 + rr_key
-            else:
-                raise ValueError(cfg.arbiter)
-            key = jnp.where(elig, key, jnp.float32(3e38))
-            g = jnp.argmin(key).astype(jnp.int32)
-            ok = elig[g]
-
-            sz = head_sz[g]
-            at = head_at[g]
-            onehot = (iota_n == g) & ok
-            # consume tokens
-            if shaped:
-                c["tb"] = c["tb"]._replace(
-                    tokens=c["tb"].tokens - jnp.where(onehot, cost, 0))
-            # pop flow queue
-            c["q_head"] = (c["q_head"] + onehot) % cfg.qlen
-            c["q_cnt"] = c["q_cnt"] - onehot
-            # link budget + credits (per-message fabric overhead included)
-            dir_idx = jnp.minimum(fl_in_dir[g], 1)
-            spend = jnp.where((fl_in_dir[g] != 2) & ok,
-                              sz.astype(jnp.float32) + ovh, 0.0)
-            budget = budget.at[dir_idx].add(-spend)
-            c["credits_used"] = c["credits_used"] + ok.astype(jnp.int32)
-            # accel queue push
-            a = fl_accel[g]
-            slot = (c["aq_head"][a] + c["aq_cnt"][a]) % cfg.aq_len
-            c["aq_sz"] = c["aq_sz"].at[a, slot].set(jnp.where(ok, sz, c["aq_sz"][a, slot]))
-            c["aq_fl"] = c["aq_fl"].at[a, slot].set(jnp.where(ok, g, c["aq_fl"][a, slot]))
-            c["aq_at"] = c["aq_at"].at[a, slot].set(jnp.where(ok, at, c["aq_at"][a, slot]))
-            c["aq_cnt"] = c["aq_cnt"].at[a].add(ok.astype(jnp.int32))
-            c["aq_bytes"] = c["aq_bytes"].at[a].add(jnp.where(ok, sz, 0))
-            # arbiter state.  WRR is message-granular (one packet per flow
-            # per round — how the paper's Host_noTS FPGA arbiter behaves,
-            # letting large messages steal bytes); WFQ is byte-granular.
-            c["rr_ptr"] = jnp.where(ok, g, c["rr_ptr"])
-            if cfg.arbiter == ARB_WRR:
-                c["vft"] = c["vft"] + jnp.where(onehot, 1.0 / fl_w, 0.0)
-            else:
-                c["vft"] = c["vft"] + jnp.where(
-                    onehot, sz.astype(jnp.float32) / fl_w, 0.0)
-            # counters
-            c["c_adm_msgs"] = c["c_adm_msgs"] + onehot.astype(jnp.int32)
-            lo = c["c_adm_b_lo"] + jnp.where(onehot, sz, 0)
-            c["c_adm_b_hi"] = c["c_adm_b_hi"] + (lo >> 20)
-            c["c_adm_b_lo"] = lo & 0xFFFFF
-            return c, budget
-
-        carry, budget = jax.lax.fori_loop(0, cfg.k_grant, grant_body,
-                                          (carry, budget))
-
-        # -- 5. accelerator service (one accel per iteration) -------------
-        def srv_body(i, c):
-            a = i % A
-            lanes_a = c["lanes"][a]
-            lane = jnp.argmin(lanes_a).astype(jnp.int32)
-            # a lane that frees during this tick may chain back-to-back
-            # (no tick-quantization idle gap between messages)
-            free = lanes_a[lane] < jnp.float32(now_end)
-            ok = free & (c["aq_cnt"][a] > 0)
-            h = c["aq_head"][a]
-            sz = c["aq_sz"][a, h]
-            fl = c["aq_fl"][a, h]
-            at = c["aq_at"][a, h]
-            svc = interp_grid(svc_tab, a, sz.astype(jnp.float32))
-            esz = interp_grid(eg_tab, a, sz.astype(jnp.float32))
-            esz = jnp.where(fl_eg_full[fl], sz.astype(jnp.float32), esz)
-            end = jnp.maximum(lanes_a[lane], jnp.float32(now)) + svc
-            c["lanes"] = c["lanes"].at[a, lane].set(jnp.where(ok, end, lanes_a[lane]))
-            c["aq_head"] = c["aq_head"].at[a].add(ok.astype(jnp.int32)) % cfg.aq_len
-            c["aq_cnt"] = c["aq_cnt"].at[a].add(-ok.astype(jnp.int32))
-            c["aq_bytes"] = c["aq_bytes"].at[a].add(jnp.where(ok, -sz, 0))
-            # host-processing delay (software-mediated shaping only)
-            if cfg.shaping == SHAPING_SW:
-                r = c["rng"] * _LCG_A + _LCG_C
-                c["rng"] = r
-                u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
-                hostd = cfg.sw_host_delay_cycles + (u ** 4) * cfg.sw_jitter_cycles
-            else:
-                hostd = jnp.float32(0.0)
-            ready = (end + hostd).astype(jnp.int32)
-            # egress queue push
-            d = fl_eg_dir[fl]
-            slot = (c["eq_head"][d] + c["eq_cnt"][d]) % cfg.eq_len
-            full = c["eq_cnt"][d] >= cfg.eq_len
-            okq = ok & jnp.logical_not(full)
-            c["eq_sz"] = c["eq_sz"].at[d, slot].set(
-                jnp.where(okq, jnp.maximum(esz.astype(jnp.int32), 1), c["eq_sz"][d, slot]))
-            c["eq_isz"] = c["eq_isz"].at[d, slot].set(
-                jnp.where(okq, sz, c["eq_isz"][d, slot]))
-            c["eq_fl"] = c["eq_fl"].at[d, slot].set(jnp.where(okq, fl, c["eq_fl"][d, slot]))
-            c["eq_at"] = c["eq_at"].at[d, slot].set(jnp.where(okq, at, c["eq_at"][d, slot]))
-            c["eq_rd"] = c["eq_rd"].at[d, slot].set(jnp.where(okq, ready, c["eq_rd"][d, slot]))
-            c["eq_cnt"] = c["eq_cnt"].at[d].add(okq.astype(jnp.int32))
-            return c
-
-        carry = jax.lax.fori_loop(0, A * cfg.k_srv, srv_body, carry)
-
-        # -- 6. egress link + completions ----------------------------------
-        dirs = jnp.arange(3, dtype=jnp.int32)
-
-        def eg_body(_, st):
-            c, budget = st
-            h = c["eq_head"]                       # [3]
-            sz = c["eq_sz"][dirs, h]
-            isz = c["eq_isz"][dirs, h]
-            fl = c["eq_fl"][dirs, h]
-            at = c["eq_at"][dirs, h]
-            rd = c["eq_rd"][dirs, h]
-            have = c["eq_cnt"] > 0
-            ready = rd < now_end
-            bud3 = jnp.concatenate([budget, jnp.asarray([3e38], jnp.float32)])
-            bud_ok = bud3[dirs] > 0.0
-            pop = have & ready & bud_ok            # [3]
-            c["eq_head"] = (c["eq_head"] + pop) % cfg.eq_len
-            c["eq_cnt"] = c["eq_cnt"] - pop
-            spend = jnp.where(pop[:2], sz[:2].astype(jnp.float32) + ovh, 0.0)
-            budget = budget - spend
-            c["credits_used"] = c["credits_used"] - pop.sum().astype(jnp.int32)
-            # completion = transfer start + own serialization delay
-            ser = jnp.where(dirs < 2,
-                            sz.astype(jnp.float32) / bpc[jnp.minimum(dirs, 1)],
-                            0.0)
-            comp_time = jnp.maximum(rd, now) + ser.astype(jnp.int32)
-            lat = comp_time - at
-            # record (scratch slot comp_cap for non-pops)
-            base = c["comp_n"]
-            offs = jnp.cumsum(pop.astype(jnp.int32)) - pop.astype(jnp.int32)
-            idx = jnp.where(pop, (base + offs) % cfg.comp_cap, cfg.comp_cap)
-            c["comp_fl"] = c["comp_fl"].at[idx].set(fl)
-            c["comp_lat"] = c["comp_lat"].at[idx].set(lat)
-            c["comp_t"] = c["comp_t"].at[idx].set(comp_time)
-            c["comp_sz"] = c["comp_sz"].at[idx].set(isz)
-            c["comp_n"] = base + pop.sum().astype(jnp.int32)
-            # per-flow counters (SLO accounting is on ingress payload bytes,
-            # as the paper's traffic generator measures)
-            add = jax.ops.segment_sum(pop.astype(jnp.int32), fl, num_segments=N)
-            addb = jax.ops.segment_sum(
-                jnp.where(pop, isz, 0), fl, num_segments=N)
-            addl = jax.ops.segment_sum(
-                jnp.where(pop, lat.astype(jnp.float32), 0.0), fl, num_segments=N)
-            c["c_done_msgs"] = c["c_done_msgs"] + add
-            lo = c["c_done_b_lo"] + addb
-            c["c_done_b_hi"] = c["c_done_b_hi"] + (lo >> 20)
-            c["c_done_b_lo"] = lo & 0xFFFFF
-            c["c_lat_sum"] = c["c_lat_sum"] + addl
-            return c, budget
-
-        carry, budget = jax.lax.fori_loop(0, cfg.k_eg, eg_body, (carry, budget))
-
-        # Positive leftover budget is lost (a link cannot save idle time);
-        # negative budget (serialization debt of in-flight messages) carries.
-        carry["lres"] = jnp.minimum(budget, 0.0)
-        return carry, None
-
-    return tick
-
-
-# ---------------------------------------------------------------------------
-# Entry point
+# Results
 # ---------------------------------------------------------------------------
 
 
@@ -534,6 +219,46 @@ class SimResult:
                      / self.seconds / 1e9)
 
 
+#: carry keys the host actually needs — everything else (queues, lanes,
+#: rings-in-progress) stays on device, so resumable windows never pay a
+#: full-carry device_get.
+_RESULT_KEYS = ("c_adm_msgs", "c_adm_b_lo", "c_adm_b_hi", "c_done_msgs",
+                "c_done_b_lo", "c_done_b_hi", "c_drops", "c_lat_sum",
+                "comp_fl", "comp_lat", "comp_t", "comp_sz", "comp_n")
+
+
+def _collect_result(host: dict, cfg: SimConfig, t0_ticks: int) -> SimResult:
+    n = int(host["comp_n"])
+    cap = cfg.comp_cap
+    k = min(n, cap)
+    # unroll ring order (oldest first) and trim scratch slot
+    if n <= cap:
+        order = np.arange(k)
+    else:
+        start = n % cap
+        order = (np.arange(cap) + start) % cap
+    counters = {key: host[key] for key in
+                ("c_adm_msgs", "c_done_msgs", "c_drops", "c_lat_sum")}
+    counters["c_adm_bytes"] = (host["c_adm_b_hi"].astype(np.int64) << 20) \
+        + host["c_adm_b_lo"]
+    counters["c_done_bytes"] = (host["c_done_b_hi"].astype(np.int64) << 20) \
+        + host["c_done_b_lo"]
+    return SimResult(
+        counters=counters,
+        comp_flow=host["comp_fl"][:cap][order],
+        comp_lat_s=host["comp_lat"][:cap][order] / cfg.clock_hz,
+        comp_t_s=host["comp_t"][:cap][order] / cfg.clock_hz,
+        comp_sz=host["comp_sz"][:cap][order],
+        seconds=(t0_ticks + cfg.n_ticks) * cfg.tick_cycles / cfg.clock_hz,
+        clock_hz=cfg.clock_hz,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
 def simulate(flows: FlowSet, accels: AccelTable, link: LinkSpec,
              cfg: SimConfig, tb_state: tb.TBState,
              arr_t: np.ndarray, arr_sz: np.ndarray,
@@ -546,61 +271,42 @@ def simulate(flows: FlowSet, accels: AccelTable, link: LinkSpec,
     queues/buckets — the control plane uses this to reconfigure shaping
     parameters *between windows* while traffic keeps flowing, mirroring the
     paper's live MMIO reconfiguration (Sec. 5.3.1 "Dynamism").
-    """
-    if stall_mask is None:
-        stall_mask = np.zeros(t0_ticks + cfg.n_ticks, bool)
-    if carry is None:
-        carry = _init_carry(flows, accels, cfg, tb_state)
-    else:
-        # Live reconfiguration: write only the parameter "registers"
-        # (Refill_Rate / Bkt_Size / Interval / mode); in-flight tokens and
-        # timers are hardware state and keep running.
-        carry = dict(carry)
-        old = carry["tb"]
-        carry["tb"] = old._replace(
-            refill_rate=tb_state.refill_rate,
-            bkt_size=tb_state.bkt_size,
-            interval=tb_state.interval,
-            mode=tb_state.mode,
-            tokens=jnp.minimum(old.tokens, tb_state.bkt_size),
-        )
-    tick = _make_tick_fn(flows, accels, link, cfg,
-                         jnp.asarray(arr_t), jnp.asarray(arr_sz),
-                         jnp.asarray(stall_mask))
 
-    @jax.jit
-    def run(carry):
-        carry, _ = jax.lax.scan(
-            tick, carry,
-            jnp.arange(t0_ticks, t0_ticks + cfg.n_ticks, dtype=jnp.int32))
-        return carry
-
-    raw = run(carry)
-    out = jax.device_get(raw)
-    n = int(out["comp_n"])
-    cap = cfg.comp_cap
-    k = min(n, cap)
-    # unroll ring order (oldest first) and trim scratch slot
-    if n <= cap:
-        order = np.arange(k)
-    else:
-        start = n % cap
-        order = (np.arange(cap) + start) % cap
-    counters = {key: out[key] for key in
-                ("c_adm_msgs", "c_done_msgs", "c_drops", "c_lat_sum")}
-    counters["c_adm_bytes"] = (out["c_adm_b_hi"].astype(np.int64) << 20) \
-        + out["c_adm_b_lo"]
-    counters["c_done_bytes"] = (out["c_done_b_hi"].astype(np.int64) << 20) \
-        + out["c_done_b_lo"]
-    result = SimResult(
-        counters=counters,
-        comp_flow=out["comp_fl"][:cap][order],
-        comp_lat_s=out["comp_lat"][:cap][order] / cfg.clock_hz,
-        comp_t_s=out["comp_t"][:cap][order] / cfg.clock_hz,
-        comp_sz=out["comp_sz"][:cap][order],
-        seconds=(t0_ticks + cfg.n_ticks) * cfg.tick_cycles / cfg.clock_hz,
-        clock_hz=cfg.clock_hz,
-    )
+    The compiled tick loop is fetched from the engine's module-level cache:
+    repeated calls with the same (SimConfig, shapes) signature — including
+    per-window calls with new TBState registers, arrival windows, or carry
+    contents — reuse the first compilation.  The input carry is donated to
+    the engine; do not reuse a carry object after passing it in (use the one
+    returned with ``return_carry=True``)."""
+    raw = engine.run_window(flows, accels, link, cfg, tb_state,
+                            arr_t, arr_sz, stall_mask,
+                            t0_ticks=t0_ticks, carry=carry)
+    host = jax.device_get({k: raw[k] for k in _RESULT_KEYS})
+    result = _collect_result(host, cfg, t0_ticks)
     if return_carry:
         return result, raw
     return result
+
+
+def simulate_batch(flows: FlowSet, accels, link, cfg: SimConfig,
+                   tb_states, arr_t: np.ndarray, arr_sz: np.ndarray,
+                   stall_mask: np.ndarray | None = None,
+                   *, t0_ticks: int = 0) -> list[SimResult]:
+    """Run B independent simulations in one compiled ``jax.vmap`` call.
+
+    * ``tb_states``: sequence of B TBStates (per-element shaping registers);
+    * ``arr_t`` / ``arr_sz``: [B, N, M] stacked traces (``stack_arrivals``);
+    * ``accels`` / ``link``: one shared value, or sequences of B for
+      per-element accelerator tables / link specs;
+    * ``stall_mask``: shared [T] mask or per-element [B, T].
+
+    Returns one SimResult per batch element, each identical to what a serial
+    ``simulate()`` call with the same inputs produces."""
+    raw = engine.run_window_batch(flows, accels, link, cfg, tb_states,
+                                  arr_t, arr_sz, stall_mask,
+                                  t0_ticks=t0_ticks)
+    host = jax.device_get({k: raw[k] for k in _RESULT_KEYS})
+    B = host["comp_n"].shape[0]
+    return [_collect_result({k: v[b] for k, v in host.items()}, cfg,
+                            t0_ticks)
+            for b in range(B)]

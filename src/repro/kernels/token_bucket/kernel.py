@@ -13,6 +13,7 @@ BlockSpec so a block holds 1024 flows.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,20 @@ from jax.experimental import pallas as pl
 ROW_BLOCK = 8
 LANES = 128
 FLOWS_PER_BLOCK = ROW_BLOCK * LANES
+
+
+def default_interpret() -> bool:
+    """Resolve the Pallas execution mode for this process.
+
+    Only TPU backends compile this kernel (the (8, 128) int32 tiling and
+    SMEM scalar block are TPU-shaped); everything else — CPU, and GPU
+    where the Triton lowering was never validated — runs the kernel body
+    in interpret mode.  ``REPRO_TB_INTERPRET=0/1`` overrides the
+    auto-detection either way."""
+    env = os.environ.get("REPRO_TB_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
 
 
 def _tb_kernel(elapsed_ref, tokens_ref, cyc_ref, refill_ref, bkt_ref,
@@ -54,10 +69,24 @@ def _tb_kernel(elapsed_ref, tokens_ref, cyc_ref, refill_ref, bkt_ref,
     admit_ref[...] = ok.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def token_bucket_step_2d(elapsed, tokens, cyc, refill, bkt, interval, mode,
-                         cost, want, *, interpret: bool = True):
-    """All inputs [R, 128] int32 with R % 8 == 0; elapsed scalar int32."""
+                         cost, want, *, interpret: bool | None = None):
+    """All inputs [R, 128] int32 with R % 8 == 0; elapsed scalar int32.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere
+    (override with REPRO_TB_INTERPRET).  Resolution happens here, outside
+    the jit, so an env-var change takes effect on the next call instead of
+    being frozen into the first trace."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _token_bucket_step_2d(elapsed, tokens, cyc, refill, bkt,
+                                 interval, mode, cost, want,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _token_bucket_step_2d(elapsed, tokens, cyc, refill, bkt, interval, mode,
+                          cost, want, *, interpret: bool):
     R = tokens.shape[0]
     assert R % ROW_BLOCK == 0 and tokens.shape[1] == LANES
     grid = (R // ROW_BLOCK,)

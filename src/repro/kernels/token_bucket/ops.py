@@ -1,9 +1,11 @@
 """Jitted public wrapper for the token-bucket Pallas kernel.
 
 Accepts flat [N] flow-state arrays (any N), pads to the kernel's
-R x 128 tiling, dispatches, and unpads.  `interpret=True` executes the
-kernel body on CPU for validation; on a real TPU backend pass
-``interpret=False``.
+R x 128 tiling, dispatches, and unpads.  The Pallas execution mode is
+auto-detected: compiled Pallas on TPU backends, ``interpret=True`` (kernel
+body evaluated op-by-op) everywhere else.  Set ``REPRO_TB_INTERPRET=0``
+or ``=1`` to force either mode, or pass ``interpret=`` explicitly;
+``resolved_interpret()`` reports the effective choice.
 """
 from __future__ import annotations
 
@@ -14,7 +16,13 @@ import jax.numpy as jnp
 
 from repro.core.token_bucket import TBState
 from repro.kernels.token_bucket.kernel import (FLOWS_PER_BLOCK, LANES,
+                                               default_interpret,
                                                token_bucket_step_2d)
+
+
+def resolved_interpret(interpret: bool | None = None) -> bool:
+    """The Pallas mode ``token_bucket_step`` will actually run with."""
+    return default_interpret() if interpret is None else interpret
 
 
 def _pad2d(x: jax.Array, n_pad: int) -> jax.Array:
@@ -22,14 +30,22 @@ def _pad2d(x: jax.Array, n_pad: int) -> jax.Array:
     return x.reshape(-1, LANES)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def token_bucket_step(state: TBState, elapsed_cycles, msg_cost, want,
-                      *, interpret: bool = True
+                      *, interpret: bool | None = None
                       ) -> tuple[TBState, jax.Array]:
     """Advance all buckets one shaping interval and admit head messages.
 
     Drop-in replacement for (tb.advance + tb.try_admit); same semantics,
-    executed as a single fused on-device kernel."""
+    executed as a single fused on-device kernel.  The interpret mode is
+    resolved *before* entering the jit so REPRO_TB_INTERPRET changes are
+    honoured on every call, not frozen into the first trace."""
+    return _token_bucket_step(state, elapsed_cycles, msg_cost, want,
+                              interpret=resolved_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _token_bucket_step(state: TBState, elapsed_cycles, msg_cost, want,
+                       *, interpret: bool) -> tuple[TBState, jax.Array]:
     n = state.tokens.shape[0]
     n_pad = -(-n // FLOWS_PER_BLOCK) * FLOWS_PER_BLOCK
     args = [_pad2d(a, n_pad) for a in

@@ -3,7 +3,11 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional dev dep — property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import baselines, token_bucket as tb
 from repro.core.accelerator import (AcceleratorSpec, AccelTable, CATALOG,

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional dev dep — property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.models import layers as L, module as nn
 from repro.models.config import ArchConfig

@@ -1,7 +1,11 @@
 """Unit + property tests for the token-bucket mechanism (Arcus §4.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional dev dep — property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import token_bucket as tb
 
