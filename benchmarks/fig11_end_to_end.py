@@ -19,22 +19,19 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from benchmarks.common import Row, Timer, save_json, us_per_tick
 from repro.core import baselines, token_bucket as tb
 from repro.core.accelerator import CATALOG, AccelTable
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
-from repro.core.sim import SimConfig, gen_arrivals, simulate
+from repro.core.sim import gen_arrivals
 
 
 # ---------------------------------------------------------------------------
-# (a) MICA + live migration
+# (a) MICA + live migration — both systems in one batched engine call
 # ---------------------------------------------------------------------------
 
-def _mica(sys_name: str, n_ticks: int):
-    sys_cfg = baselines.ALL[sys_name]
+def _mica(sys_names, n_ticks: int):
     sha, aes = CATALOG["sha1_hmac"], CATALOG["aes128_cbc"]
     # SLOs: user1 (64B, latency-critical KV) 2 Gbps-equiv of accel I/O;
     # user2 (256B) 4 Gbps; LM opportunistic large stream on AES.
@@ -51,37 +48,46 @@ def _mica(sys_name: str, n_ticks: int):
                  SLO.gbps(0.0), priority=0, weight=0.05),
     ]
     flows = FlowSet.build(specs)
-    cfg = baselines.make_sim_config(sys_cfg, n_ticks, tick_cycles=8,
-                                    k_grant=8, k_srv=8, k_eg=8)
-    arr = gen_arrivals(flows, cfg, seed=7,
+    overrides = dict(tick_cycles=8, k_grant=8, k_srv=8, k_eg=8)
+    cfg0 = baselines.make_sim_config(baselines.ALL[sys_names[0]], n_ticks,
+                                     **overrides)
+    arr = gen_arrivals(flows, cfg0, seed=7,
                        load_ref_gbps={0: 12.0, 1: 20.0, 2: 36.0})
-    if sys_cfg.shaping == baselines.SHAPING_HW:
-        plans = [tb.params_for_gbps(2.0, max_interval=128),
-                 tb.params_for_gbps(4.0, max_interval=128),
-                 # LM harvests what AES has left after user2 (heterogeneity-
-                 # aware: aes effective at 1500B minus user2's share)
-                 tb.params_for_gbps(
-                     max(1.0, 0.9 * aes.effective_gbps(1500) - 4.0))]
-        tbs = tb.pack(plans)
-    else:
-        tbs = baselines.make_tb_state(sys_cfg, [tb.TBParams(1, 1, 1)] * 3)
-    res = simulate(flows, AccelTable.build([sha, aes]), LinkSpec(), cfg,
-                   tbs, *arr)
-    lat1 = res.latency_percentiles(0, (50, 99))
-    return dict(
-        user1_gbps=res.mean_ingress_gbps(0, flows),
-        user2_gbps=res.mean_ingress_gbps(1, flows),
-        lm_gbps=res.mean_ingress_gbps(2, flows),
-        user1_p99_over_p50=(lat1[99] / max(lat1[50], 1e-12)),
-    )
+
+    def tb_for(sys_name):
+        sys_cfg = baselines.ALL[sys_name]
+        if sys_cfg.shaping == baselines.SHAPING_HW:
+            plans = [tb.params_for_gbps(2.0, max_interval=128),
+                     tb.params_for_gbps(4.0, max_interval=128),
+                     # LM harvests what AES has left after user2
+                     # (heterogeneity-aware: aes effective at 1500B minus
+                     # user2's share)
+                     tb.params_for_gbps(
+                         max(1.0, 0.9 * aes.effective_gbps(1500) - 4.0))]
+            return tb.pack(plans)
+        return baselines.make_tb_state(sys_cfg, [tb.TBParams(1, 1, 1)] * 3)
+
+    batch = baselines.run_system_batch(
+        sys_names, flows, AccelTable.build([sha, aes]), LinkSpec(),
+        n_ticks, tb_states=[tb_for(s) for s in sys_names], arr=arr,
+        cfg_overrides=overrides)
+    out = {}
+    for sys_name, res in zip(sys_names, batch):
+        lat1 = res.latency_percentiles(0, (50, 99))
+        out[sys_name] = dict(
+            user1_gbps=res.mean_ingress_gbps(0, flows),
+            user2_gbps=res.mean_ingress_gbps(1, flows),
+            lm_gbps=res.mean_ingress_gbps(2, flows),
+            user1_p99_over_p50=(lat1[99] / max(lat1[50], 1e-12)),
+        )
+    return out
 
 
 # ---------------------------------------------------------------------------
-# (b) storage reads vs writes
+# (b) storage reads vs writes — both systems in one batched engine call
 # ---------------------------------------------------------------------------
 
-def _storage(sys_name: str, n_ticks: int):
-    sys_cfg = baselines.ALL[sys_name]
+def _storage(sys_names, n_ticks: int):
     # NVMe RAID-0: service is operation-dominated — 1KB random reads
     # ~20 us, 4KB writes ~500 us (program + GC amortization); 64-deep
     # queue parallelism across 4 SSDs.
@@ -99,29 +105,37 @@ def _storage(sys_name: str, n_ticks: int):
                  SLO.iops(SLO_W)),
     ]
     flows = FlowSet.build(specs)
-    cfg = baselines.make_sim_config(sys_cfg, n_ticks, tick_cycles=64,
-                                    k_grant=16, k_srv=16, k_eg=16,
-                                    lmax=64, qlen=1024, comp_cap=1 << 17,
-                                    aq_len=2048, aq_byte_cap=4 << 20)
-    arr = gen_arrivals(flows, cfg, seed=11)
-    if sys_cfg.shaping == baselines.SHAPING_HW:
-        plans = [tb.params_for_iops(SLO_R * 1.05),
-                 tb.params_for_iops(SLO_W * 1.05)]
-        # writes arrive in 256-deep bursts; a tight bucket keeps them from
-        # flooding the shared device buffer ahead of reads (the shaping
-        # decision the profiler's SLO-Violating tag encodes)
-        tbs = tb.pack(plans)
-    else:
-        tbs = baselines.make_tb_state(sys_cfg, [tb.TBParams(1, 1, 1)] * 2)
-    res = simulate(flows, AccelTable.build([nvme]),
-                   LinkSpec(credits=4096), cfg, tbs, *arr)
-    warm = 0.15 * res.seconds
-    return dict(
-        read_miops=res.mean_rate(0, "iops", warmup_s=warm) / 1e6,
-        write_kiops=res.mean_rate(1, "iops", warmup_s=warm) / 1e3,
-        read_frac_of_slo=res.mean_rate(0, "iops", warmup_s=warm) / SLO_R,
-        write_over_slo_x=res.mean_rate(1, "iops", warmup_s=warm) / SLO_W,
-    )
+    overrides = dict(tick_cycles=64, k_grant=16, k_srv=16, k_eg=16,
+                     lmax=64, qlen=1024, comp_cap=1 << 17,
+                     aq_len=2048, aq_byte_cap=4 << 20)
+    cfg0 = baselines.make_sim_config(baselines.ALL[sys_names[0]], n_ticks,
+                                     **overrides)
+    arr = gen_arrivals(flows, cfg0, seed=11)
+
+    def tb_for(sys_name):
+        sys_cfg = baselines.ALL[sys_name]
+        if sys_cfg.shaping == baselines.SHAPING_HW:
+            # writes arrive in 256-deep bursts; a tight bucket keeps them
+            # from flooding the shared device buffer ahead of reads (the
+            # shaping decision the profiler's SLO-Violating tag encodes)
+            return tb.pack([tb.params_for_iops(SLO_R * 1.05),
+                            tb.params_for_iops(SLO_W * 1.05)])
+        return baselines.make_tb_state(sys_cfg, [tb.TBParams(1, 1, 1)] * 2)
+
+    batch = baselines.run_system_batch(
+        sys_names, flows, AccelTable.build([nvme]), LinkSpec(credits=4096),
+        n_ticks, tb_states=[tb_for(s) for s in sys_names], arr=arr,
+        cfg_overrides=overrides)
+    out = {}
+    for sys_name, res in zip(sys_names, batch):
+        warm = 0.15 * res.seconds
+        out[sys_name] = dict(
+            read_miops=res.mean_rate(0, "iops", warmup_s=warm) / 1e6,
+            write_kiops=res.mean_rate(1, "iops", warmup_s=warm) / 1e3,
+            read_frac_of_slo=res.mean_rate(0, "iops", warmup_s=warm) / SLO_R,
+            write_over_slo_x=res.mean_rate(1, "iops", warmup_s=warm) / SLO_W,
+        )
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -170,19 +184,23 @@ def _rocksdb():
 def run(quick: bool = False) -> list[Row]:
     rows, payload = [], {}
     n_ticks = 40_000 if quick else 150_000
-    for sys_name in ("Arcus", "Bypassed_noTS_panic"):
-        with Timer() as t:
-            payload[f"mica_{sys_name}"] = _mica(sys_name, n_ticks)
+    mica_systems = ("Arcus", "Bypassed_noTS_panic")
+    with Timer() as t:
+        mica = _mica(mica_systems, n_ticks)
+    for sys_name in mica_systems:
+        payload[f"mica_{sys_name}"] = mica[sys_name]
         rows.append(Row(f"fig11a_mica/{sys_name}",
-                        us_per_tick(t.s, n_ticks),
-                        payload[f"mica_{sys_name}"]))
+                        us_per_tick(t.s / len(mica_systems), n_ticks),
+                        mica[sys_name]))
     n2 = n_ticks * 2
-    for sys_name in ("Arcus", "Host_noTS"):
-        with Timer() as t:
-            payload[f"storage_{sys_name}"] = _storage(sys_name, n2)
+    storage_systems = ("Arcus", "Host_noTS")
+    with Timer() as t:
+        storage = _storage(storage_systems, n2)
+    for sys_name in storage_systems:
+        payload[f"storage_{sys_name}"] = storage[sys_name]
         rows.append(Row(f"fig11b_storage/{sys_name}",
-                        us_per_tick(t.s, n2),
-                        payload[f"storage_{sys_name}"]))
+                        us_per_tick(t.s / len(storage_systems), n2),
+                        storage[sys_name]))
     payload["rocksdb"] = _rocksdb()
     rows.append(Row("table4_rocksdb", 0.0, payload["rocksdb"]))
     save_json("fig11_end_to_end", payload)

@@ -15,6 +15,15 @@ or in minutes:
                             8 serial simulate() calls
   sim_perf/grant_vec      — vectorized RR grant fast path vs the sequential
                             argmin loop (16 flows, 8-wide grants)
+  sim_perf/stage_vec      — vectorized accelerator-service + egress stages
+                            (prefix-sum slot assignment) vs the sequential
+                            per-iteration loops
+  sim_perf/profile_batch8 — ProfileTable.profile_contexts over 8
+                            heterogeneous contexts (ragged flow counts,
+                            mixed accelerators) as ONE compiled engine
+                            call vs 8 serial profile_context() runs; the
+                            engine cache stats assert exactly one
+                            compiled call was issued
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ from repro.core import engine, token_bucket as tb
 from repro.core.accelerator import CATALOG, AccelTable
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
+from repro.core.profiler import ProfileTable
 from repro.core.runtime import ArcusRuntime
 from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SimConfig,
                             gen_arrivals, simulate, simulate_batch,
@@ -145,6 +155,64 @@ def run(quick: bool = False) -> list[Row]:
                     dict(seq_us_per_tick=us_per_tick(t_seq.s, n_ticks_g),
                          speedup_x=t_seq.s / max(t_fast.s, 1e-9),
                          counters_match_seq=bool(g_match))))
+
+    # -- vectorized service + egress stages vs sequential loops ----------
+    # k_srv=8 crosses the service-stage width threshold (A * k_srv >= 8)
+    cf_sv = dataclasses.replace(cf, stage_fast=True, k_srv=8, k_eg=8)
+    cf_ss = dataclasses.replace(cf_sv, stage_fast=False)
+    simulate(fl, ac, lk, cf_sv, tg, *ag)       # compile both variants
+    simulate(fl, ac, lk, cf_ss, tg, *ag)
+    with Timer() as t_sv:
+        r_sv = simulate(fl, ac, lk, cf_sv, tg, *ag)
+    with Timer() as t_ss:
+        r_ss = simulate(fl, ac, lk, cf_ss, tg, *ag)
+    s_match = all(
+        np.array_equal(np.asarray(r_sv.counters[k]),
+                       np.asarray(r_ss.counters[k]))
+        for k in ("c_adm_msgs", "c_done_msgs", "c_drops"))
+    rows.append(Row("sim_perf/stage_vec",
+                    us_per_tick(t_sv.s, n_ticks_g),
+                    dict(seq_us_per_tick=us_per_tick(t_ss.s, n_ticks_g),
+                         speedup_x=t_ss.s / max(t_sv.s, 1e-9),
+                         counters_match_seq=bool(s_match))))
+
+    # -- batched profiler sweep: 8 heterogeneous contexts, 1 engine call --
+    ctxs = [
+        (CATALOG["ipsec32"], [(Path.FUNCTION_CALL, 64, 0.9)]),
+        (CATALOG["ipsec32"], [(Path.FUNCTION_CALL, 1500, 0.9)] * 2),
+        (CATALOG["ipsec32"], [(Path.FUNCTION_CALL, 64, 0.9),
+                              (Path.FUNCTION_CALL, 1500, 0.9)]),
+        (CATALOG["synthetic50"], [(Path.FUNCTION_CALL, 512, 0.9)] * 3),
+        (CATALOG["synthetic50"], [(Path.FUNCTION_CALL, 4096, 0.9)]),
+        (CATALOG["aes256"], [(Path.FUNCTION_CALL, 1024, 0.9)] * 2),
+        (CATALOG["sha3_512"], [(Path.INLINE_NIC_RX, 256, 0.9)] * 2),
+        (CATALOG["compress"], [(Path.FUNCTION_CALL, 4096, 0.9),
+                               (Path.FUNCTION_CALL, 64, 0.9),
+                               (Path.FUNCTION_CALL, 1024, 0.9)]),
+    ]
+    prof_ticks = 6_000 if quick else 30_000
+    pt_serial = ProfileTable(n_ticks=prof_ticks)
+    engine.cache_clear()
+    with Timer() as t_pser:                   # 8 serial compile-bound runs
+        serial_entries = [pt_serial.profile_context(a, f) for a, f in ctxs]
+    pt_batch = ProfileTable(n_ticks=prof_ticks)
+    engine.cache_clear()
+    with Timer() as t_pbat:                   # one ragged batched call
+        batch_entries = pt_batch.profile_contexts(ctxs)
+    info = engine.cache_info()
+    # acceptance criterion: the whole heterogeneous Capacity(t, X, N)
+    # sweep issues exactly ONE compiled engine call
+    assert info == {"entries": 1, "traces": 1}, info
+    p_match = all(s.capacity_gbps == b.capacity_gbps
+                  and s.per_flow_gbps == b.per_flow_gbps
+                  for s, b in zip(serial_entries, batch_entries))
+    assert p_match, "batched profiler sweep diverged from serial entries"
+    rows.append(Row("sim_perf/profile_batch8",
+                    us_per_tick(t_pbat.s, len(ctxs) * prof_ticks),
+                    dict(wall_s=t_pbat.s, serial_wall_s=t_pser.s,
+                         speedup_vs_serial_x=t_pser.s / max(t_pbat.s, 1e-9),
+                         contexts=len(ctxs), engine_calls=info["entries"],
+                         entries_match_serial=bool(p_match))))
 
     payload = {r.name.split("/", 1)[1]: dict(us_per_call=r.us_per_call,
                                              **r.derived) for r in rows}

@@ -23,7 +23,7 @@ import numpy as np
 from repro.core import token_bucket as tb
 from repro.core.interconnect import ARB_PRIORITY, ARB_RR, ARB_WFQ, ARB_WRR
 from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SHAPING_SW, SimConfig,
-                            gen_stall_mask)
+                            gen_stall_mask, simulate_batch, stack_arrivals)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +78,39 @@ def make_stall_mask(sys_cfg: SystemConfig, cfg: SimConfig, *, seed: int = 1,
     base = dataclasses.replace(cfg, n_ticks=n)
     return gen_stall_mask(base, seed=seed, stall_rate_hz=sys_cfg.stall_rate_hz,
                           stall_us=sys_cfg.stall_us)
+
+
+def run_system_batch(systems, flows, accels, link, n_ticks: int, *,
+                     tb_states, arr, stall_seed: int = 1,
+                     cfg_overrides: dict | None = None):
+    """Run several baseline *systems* over the same scenario as ONE
+    vmap-batched compiled engine call.
+
+    Shaping mode, arbiter and the software-delay model are traced engine
+    inputs, so Arcus and its Host/Bypassed baselines (Sec. 5.1) — which
+    differ only in those knobs — batch into a single executable instead of
+    one compile-bound serial ``simulate`` per system.
+
+    * ``systems``: sequence of SystemConfig (or names into ``ALL``);
+    * ``tb_states``: per-system TBState registers;
+    * ``arr``: one shared (times, sizes) trace, or a per-system sequence;
+    * SW systems get their stall process generated here ([B, T] mask).
+
+    Returns ``list[SimResult]``, one per system, each bitwise-identical to
+    a serial run of that system."""
+    systems = [ALL[s] if isinstance(s, str) else s for s in systems]
+    cfgs = [make_sim_config(s, n_ticks, **(cfg_overrides or {}))
+            for s in systems]
+    arrs = list(arr) if isinstance(arr, (list, tuple)) \
+        and isinstance(arr[0], (list, tuple)) else [arr] * len(systems)
+    stall = None
+    masks = [make_stall_mask(s, c, seed=stall_seed)
+             for s, c in zip(systems, cfgs)]
+    if any(m is not None for m in masks):
+        stall = np.stack([m if m is not None else np.zeros(n_ticks, bool)
+                          for m in masks])
+    return simulate_batch(flows, accels, link, cfgs, list(tb_states),
+                          *stack_arrivals(arrs), stall_mask=stall)
 
 
 def make_tb_state(sys_cfg: SystemConfig, plans: list[tb.TBParams],

@@ -9,22 +9,33 @@ compile time — not simulated ticks — the dominant cost.
 
 This module splits trace-time constants from runtime data:
 
-* **static** (compile-cache key): ``SimConfig`` (tick counts, queue depths,
-  shaping/arbiter mode, grant widths) plus the shapes of the flow set,
+* **static** (compile-cache key): the *structural* ``SimConfig`` fields (tick
+  counts, queue depths, grant widths) plus the shapes of the flow set,
   accelerator tables, arrival traces and stall mask;
 * **traced** (plain arguments): the arrival trace, stall mask, window start
-  ``t0``, per-flow routing/weight tables, accelerator service tables, link
-  rates, and the full carry — including the TBState parameter "registers",
-  so a live register write (Sec. 5.3.1 "Dynamism") never retraces.
+  ``t0``, per-flow routing/weight tables, the **per-flow validity mask**,
+  accelerator service tables, link rates, the shaping / arbiter mode words,
+  the software-shaping delay model, and the full carry — including the
+  TBState parameter "registers", so a live register write (Sec. 5.3.1
+  "Dynamism") never retraces.
+
+Because the shaping mode and arbiter are traced *mode words* rather than
+compile-time constants, heterogeneous system configurations (Arcus vs the
+Host/Bypassed baselines of Sec. 5.1) share one compiled engine and can run
+as lanes of the same ``jax.vmap`` batch.
 
 Compiled entry points are cached at module level (``_RUN_CACHE``); the carry
 is donated (``donate_argnums``) so window-to-window resumption reuses device
 buffers instead of copying the ~30-array carry each window.
 
 ``run_window_batch`` wraps the same core in ``jax.vmap`` over a leading batch
-axis of (arrival trace, TBState registers, optionally accelerator/link
-tables), so multi-seed / multi-rate-point experiments execute as one
-compiled call.
+axis of (arrival trace, TBState registers, optionally flow tables, system
+mode words, accelerator/link tables and stall masks).  Flow sets with
+*different flow counts* are padded to a shared ``n_flows_max`` and masked
+with ``fl_mask``: padded lanes never receive arrivals, are never eligible
+for grants, and the arbiter keys are computed modulo the *active* flow
+count, so every counter of an active lane is bitwise-identical to a serial
+unpadded run.
 """
 from __future__ import annotations
 
@@ -78,18 +89,37 @@ class SimConfig:
     k_srv: int = 2             # service starts per accelerator per tick
     k_eg: int = 4              # egress pops per direction per tick
     lmax: int = 16             # max accelerator lanes
-    shaping: int = SHAPING_HW
-    arbiter: int = ARB_RR
-    # software-shaping pathology model
+    shaping: int = SHAPING_HW   # traced mode word — NOT in the compile key
+    arbiter: int = ARB_RR       # traced mode word — NOT in the compile key
+    # software-shaping pathology model (traced — NOT in the compile key)
     sw_host_delay_cycles: int = 500      # ~2 us base host processing delay
     sw_jitter_cycles: int = 2500         # up to +10 us heavy-tail jitter
     # one-shot vectorized grant selection for uncontended RR ticks (falls
     # back to the sequential argmin loop whenever semantics require it)
     grant_fast: bool = True
+    # one-shot vectorized accelerator-service and egress stages.  Egress is
+    # always vectorized under this flag; the service stage additionally
+    # requires A * k_srv >= 8 (below that the unrolled loop wins on CPU)
+    # and falls back to the sequential loop whenever a lane could chain
+    # back-to-back messages within one tick.
+    stage_fast: bool = True
 
     @property
     def seconds(self) -> float:
         return self.n_ticks * self.tick_cycles / self.clock_hz
+
+
+#: SimConfig fields passed to the engine as traced values: two SimConfigs
+#: differing only in these share one compiled executable (and may be lanes
+#: of the same batch).
+TRACED_CFG_FIELDS = ("shaping", "arbiter", "sw_host_delay_cycles",
+                     "sw_jitter_cycles")
+
+
+def _static_cfg(cfg: SimConfig) -> SimConfig:
+    """Canonical compile-cache form of a SimConfig (traced fields zeroed)."""
+    return dataclasses.replace(
+        cfg, **{f: 0 for f in TRACED_CFG_FIELDS})
 
 
 # ---------------------------------------------------------------------------
@@ -98,8 +128,9 @@ class SimConfig:
 
 
 def init_carry(flows: FlowSet, accels: AccelTable, cfg: SimConfig,
-               tb_state: tb.TBState) -> dict[str, Any]:
-    N, A = flows.n, accels.n
+               tb_state: tb.TBState, *, n_flows: int | None = None
+               ) -> dict[str, Any]:
+    N, A = (n_flows or flows.n), accels.n
     lanes_busy = np.zeros((A, cfg.lmax), np.float32)
     for a in range(A):
         lanes_busy[a, accels.parallelism[a]:] = np.float32(3e38)  # lane disabled
@@ -173,36 +204,112 @@ def reconfigure_carry(carry: dict, tb_state: tb.TBState) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Flow / register padding (ragged multi-tenant batching)
+# ---------------------------------------------------------------------------
+
+
+def pad_tb_state(state: tb.TBState, n_max: int) -> tb.TBState:
+    """Pad per-flow TB registers to ``n_max`` lanes with benign parameters
+    (interval 1 avoids div-by-zero in the shared timer advance; padded lanes
+    are never offered messages, so their token state is inert)."""
+    n = int(np.asarray(state.tokens).shape[0])
+    if n == n_max:
+        return state
+    if n > n_max:
+        raise ValueError(f"TBState has {n} lanes > n_max={n_max}")
+    pad = n_max - n
+
+    def ext(x, fill):
+        x = np.asarray(x)
+        return np.concatenate([x, np.full((pad,), fill, x.dtype)])
+
+    return tb.TBState(
+        tokens=jnp.asarray(ext(state.tokens, 0)),
+        cyc=jnp.asarray(ext(state.cyc, 0)),
+        refill_rate=jnp.asarray(ext(state.refill_rate, 1)),
+        bkt_size=jnp.asarray(ext(state.bkt_size, 1)),
+        interval=jnp.asarray(ext(state.interval, 1)),
+        mode=jnp.asarray(ext(state.mode, 0)),
+    )
+
+
+def _flow_args(flows: FlowSet, n_max: int) -> dict[str, np.ndarray]:
+    """Per-flow routing/weight tables padded to ``n_max`` plus the validity
+    mask.  Padded lanes route to accel 0 / direction 0 (any in-range value:
+    they are never granted) and carry weight 1 to keep 1/w finite."""
+    n = flows.n
+
+    def pad(x, fill, dtype):
+        x = np.asarray(x, dtype)
+        return np.concatenate(
+            [x, np.full((n_max - n,), fill, dtype)]) if n_max > n else x
+
+    return dict(
+        fl_accel=pad(flows.accel_id, 0, np.int32),
+        fl_in_dir=pad(flows.ingress_dir, 0, np.int32),
+        fl_eg_dir=pad(flows.egress_dir, 0, np.int32),
+        # inline-NIC-RX delivers the full payload to the host no matter what
+        # the accelerator emits; other paths transfer the accel's output.
+        fl_eg_full=pad(flows.path == int(Path.INLINE_NIC_RX), False, bool),
+        fl_prio=pad(flows.priority, 0, np.float32),
+        fl_w=pad(np.maximum(flows.weight, 1e-3), 1.0, np.float32),
+        fl_mask=pad(np.ones(n, bool), False, bool),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Traced-argument packing (everything here may change without a retrace)
 # ---------------------------------------------------------------------------
+
+
+def _window_stall(stall_mask, cfg: SimConfig, t0_ticks) -> np.ndarray:
+    """Window-relative stall mask, always ``[n_ticks]`` so the compiled
+    signature is independent of the window start ``t0``."""
+    if stall_mask is None:
+        return np.zeros(cfg.n_ticks, bool)
+    stall_mask = np.asarray(stall_mask, bool)
+    if stall_mask.shape[-1] == cfg.n_ticks:
+        return stall_mask
+    t0 = int(t0_ticks)
+    if stall_mask.shape[-1] < t0 + cfg.n_ticks:
+        raise ValueError(
+            f"stall mask covers {stall_mask.shape[-1]} ticks < "
+            f"t0+n_ticks={t0 + cfg.n_ticks}")
+    return stall_mask[..., t0:t0 + cfg.n_ticks]
+
+
+def _check_modes(cfg: SimConfig) -> None:
+    """Traced mode words bypass compile-time checks — validate up front."""
+    if cfg.arbiter not in (ARB_RR, ARB_WRR, ARB_PRIORITY, ARB_WFQ):
+        raise ValueError(cfg.arbiter)
+    if cfg.shaping not in (SHAPING_NONE, SHAPING_HW, SHAPING_SW):
+        raise ValueError(cfg.shaping)
 
 
 def _pack_args(flows: FlowSet, accels: AccelTable, link: LinkSpec,
                cfg: SimConfig, arr_t, arr_sz, stall_mask,
                t0_ticks) -> dict[str, Any]:
+    _check_modes(cfg)
     h2d_bpc, d2h_bpc = link.bytes_per_cycle()
     args = dict(
         arr_t=jnp.asarray(arr_t, jnp.int32),
         arr_sz=jnp.asarray(arr_sz, jnp.int32),
         t0=jnp.asarray(t0_ticks, jnp.int32),
-        fl_accel=jnp.asarray(flows.accel_id, jnp.int32),
-        fl_in_dir=jnp.asarray(flows.ingress_dir, jnp.int32),
-        fl_eg_dir=jnp.asarray(flows.egress_dir, jnp.int32),
-        # inline-NIC-RX delivers the full payload to the host no matter what
-        # the accelerator emits; other paths transfer the accel's output.
-        fl_eg_full=jnp.asarray(flows.path == int(Path.INLINE_NIC_RX)),
-        fl_prio=jnp.asarray(flows.priority, jnp.float32),
-        fl_w=jnp.asarray(np.maximum(flows.weight, 1e-3), jnp.float32),
         svc_tab=jnp.asarray(accels.service_cycles, jnp.float32),
         eg_tab=jnp.asarray(accels.egress_bytes, jnp.float32),
         bpc=jnp.asarray([h2d_bpc, d2h_bpc], jnp.float32),
         ovh=jnp.asarray(link.msg_overhead_bytes, jnp.float32),
         credits=jnp.asarray(link.credits, jnp.int32),
+        # system mode words (Sec. 5.1 configurations) — traced, so
+        # heterogeneous baselines share one compiled engine
+        mode=jnp.asarray(cfg.shaping, jnp.int32),
+        arb=jnp.asarray(cfg.arbiter, jnp.int32),
+        sw_delay=jnp.asarray(cfg.sw_host_delay_cycles, jnp.float32),
+        sw_jit=jnp.asarray(cfg.sw_jitter_cycles, jnp.float32),
+        stall=jnp.asarray(_window_stall(stall_mask, cfg, t0_ticks), bool),
     )
-    if cfg.shaping == SHAPING_SW:
-        if stall_mask is None:
-            stall_mask = np.zeros(int(t0_ticks) + cfg.n_ticks, bool)
-        args["stall"] = jnp.asarray(stall_mask, bool)
+    for k, v in _flow_args(flows, flows.n).items():
+        args[k] = jnp.asarray(v)
     return args
 
 
@@ -214,9 +321,9 @@ def _args_sig(args: dict[str, Any]) -> tuple:
 # The tick body
 # ---------------------------------------------------------------------------
 
-#: inner pipeline-stage loops (k_arr / k_grant / k_srv / k_eg, trip counts
-#: 2-16) are unrolled into the scan body up to this bound: XLA while-loop
-#: per-iteration overhead dominates these tiny bodies on CPU.
+#: inner pipeline-stage loops (k_grant / k_srv / k_eg, trip counts 2-16) are
+#: unrolled into the scan body up to this bound: XLA while-loop per-iteration
+#: overhead dominates these tiny bodies on CPU.
 _UNROLL_MAX = 32
 
 
@@ -230,53 +337,83 @@ def _fori(n: int, body, init):
     return jax.lax.fori_loop(0, n, body, init)
 
 
+@functools.lru_cache(maxsize=None)
+def _lcg_tables(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Closed-form LCG step tables: r_m = r0 * POW[m-1] + SUM[m-1] (int32
+    wraparound) equals m iterated ``r = r * A + C`` updates."""
+    a, c, m = int(_LCG_A), int(_LCG_C), 1 << 32
+    pows, sums = [], []
+    p, s = 1, 0
+    for _ in range(n):
+        p = (p * a) % m
+        s = (s * a + c) % m
+        pows.append(p)
+        sums.append(s)
+    to_i32 = lambda v: np.array(v, np.uint32).astype(np.int32)  # noqa: E731
+    return to_i32(pows), to_i32(sums)
+
+
+def _interp_mat(table, msg_bytes_f32):
+    """interp_grid over a full [A, K] message matrix (one row per accel)."""
+    A = table.shape[0]
+    a_grid = jnp.broadcast_to(jnp.arange(A, dtype=jnp.int32)[:, None],
+                              msg_bytes_f32.shape)
+    return interp_grid(table, a_grid, msg_bytes_f32)
+
+
 def _tick(cfg: SimConfig, args: dict, carry: dict, t):
     arr_t, arr_sz = args["arr_t"], args["arr_sz"]
     fl_accel, fl_in_dir = args["fl_accel"], args["fl_in_dir"]
     fl_eg_dir, fl_eg_full = args["fl_eg_dir"], args["fl_eg_full"]
-    fl_prio, fl_w = args["fl_prio"], args["fl_w"]
+    fl_prio, fl_w, fl_mask = args["fl_prio"], args["fl_w"], args["fl_mask"]
     svc_tab, eg_tab = args["svc_tab"], args["eg_tab"]
     bpc, ovh, credits = args["bpc"], args["ovh"], args["credits"]
+    mode, arb = args["mode"], args["arb"]
     N = fl_accel.shape[0]
     A = svc_tab.shape[0]
     iota_n = jnp.arange(N, dtype=jnp.int32)
-    shaped = cfg.shaping in (SHAPING_HW, SHAPING_SW)
+    sw = mode == SHAPING_SW
+    shaped = (mode == SHAPING_HW) | sw
+    arb_rr = arb == ARB_RR
+    # active (unpadded) lanes; arbiter keys cycle modulo this count so a
+    # padded batch element is bitwise-identical to its unpadded serial run
+    n_act = jnp.maximum(jnp.sum(fl_mask.astype(jnp.int32)), 1)
 
     now = t * cfg.tick_cycles
     now_end = now + cfg.tick_cycles
-    is_stall = (args["stall"][t] if cfg.shaping == SHAPING_SW
-                else jnp.asarray(False))
+    is_stall = sw & args["stall"][t - args["t0"]]
 
     # -- 1. token-bucket timers ------------------------------------
-    if cfg.shaping == SHAPING_SW:
-        # host descheduled: refills deferred, catch up on wakeup
-        pend = carry["sw_pend"] + cfg.tick_cycles
-        elapsed = jnp.where(is_stall, 0, pend)
-        carry["sw_pend"] = jnp.where(is_stall, pend, 0)
-        carry["tb"] = tb.advance(carry["tb"], elapsed)
-    elif cfg.shaping == SHAPING_HW:
-        carry["tb"] = tb.advance(carry["tb"], cfg.tick_cycles)
+    # host descheduled (software shaping): refills deferred, catch up on
+    # wakeup; hardware shaping and unshaped systems tick every cycle
+    pend = carry["sw_pend"] + cfg.tick_cycles
+    elapsed = jnp.where(sw, jnp.where(is_stall, 0, pend), cfg.tick_cycles)
+    carry["sw_pend"] = jnp.where(sw & is_stall, pend, 0)
+    carry["tb"] = tb.advance(carry["tb"], elapsed)
 
-    # -- 2. arrivals -> per-flow queues ------------------------------
-    def arr_body(_, c):
-        ptr = c["arr_ptr"]
-        nxt_t = arr_t[iota_n, jnp.minimum(ptr, arr_t.shape[1] - 1)]
-        nxt_s = arr_sz[iota_n, jnp.minimum(ptr, arr_t.shape[1] - 1)]
-        due = jnp.logical_and(nxt_t < now_end, ptr < arr_t.shape[1])
-        room = c["q_cnt"] < cfg.qlen
-        take = jnp.logical_and(due, room)
-        drop = jnp.logical_and(due, jnp.logical_not(room))
-        slot = (c["q_head"] + c["q_cnt"]) % cfg.qlen
-        c["q_sz"] = c["q_sz"].at[iota_n, slot].set(
-            jnp.where(take, nxt_s, c["q_sz"][iota_n, slot]))
-        c["q_at"] = c["q_at"].at[iota_n, slot].set(
-            jnp.where(take, nxt_t, c["q_at"][iota_n, slot]))
-        c["q_cnt"] = c["q_cnt"] + take.astype(jnp.int32)
-        c["arr_ptr"] = ptr + jnp.logical_or(take, drop).astype(jnp.int32)
-        c["c_drops"] = c["c_drops"] + drop.astype(jnp.int32)
-        return c
-
-    carry = _fori(cfg.k_arr, arr_body, carry)
+    # -- 2. arrivals -> per-flow queues (single gather) ----------------
+    # one [N, k_arr] gather of the next candidate arrivals per flow; the
+    # due set is a per-row prefix (traces are time-sorted, INF-padded), so
+    # counts replace the old k_arr-iteration drain loop exactly: the first
+    # `room` due messages are taken, the remaining due ones dropped.
+    M = arr_t.shape[1]
+    jj_a = jnp.arange(cfg.k_arr, dtype=jnp.int32)
+    pos = carry["arr_ptr"][:, None] + jj_a[None, :]
+    gidx = jnp.minimum(pos, M - 1)
+    nxt_t = arr_t[iota_n[:, None], gidx]
+    nxt_s = arr_sz[iota_n[:, None], gidx]
+    due = (nxt_t < now_end) & (pos < M)
+    n_due = due.astype(jnp.int32).sum(1)
+    n_take = jnp.minimum(n_due, jnp.maximum(cfg.qlen - carry["q_cnt"], 0))
+    take = due & (jj_a[None, :] < n_take[:, None])
+    slot = (carry["q_head"][:, None] + carry["q_cnt"][:, None]
+            + jj_a[None, :]) % cfg.qlen
+    row = jnp.where(take, iota_n[:, None], N)        # OOB rows are dropped
+    carry["q_sz"] = carry["q_sz"].at[row, slot].set(nxt_s, mode="drop")
+    carry["q_at"] = carry["q_at"].at[row, slot].set(nxt_t, mode="drop")
+    carry["q_cnt"] = carry["q_cnt"] + n_take
+    carry["arr_ptr"] = carry["arr_ptr"] + n_due
+    carry["c_drops"] = carry["c_drops"] + (n_due - n_take)
 
     # -- 3. per-tick link budgets ------------------------------------
     budget = bpc * cfg.tick_cycles + carry["lres"]  # [2] bytes
@@ -288,10 +425,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         head_at = c["q_at"][iota_n, c["q_head"]]
         have = c["q_cnt"] > 0
         cost = tb.cost_of(c["tb"], head_sz)
-        if shaped:
-            tok_ok = c["tb"].tokens >= cost
-        else:
-            tok_ok = jnp.ones((N,), bool)
+        tok_ok = jnp.logical_or(~shaped, c["tb"].tokens >= cost)
         a_of = fl_accel
         aq_room = jnp.logical_and(
             c["aq_cnt"][a_of] < cfg.aq_len,
@@ -304,20 +438,16 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         bud_f = jnp.where(fl_in_dir == 2, jnp.float32(3e38),
                           budget[jnp.minimum(fl_in_dir, 1)])
         bud_ok = bud_f > 0.0
-        elig = have & tok_ok & aq_room & cred_ok & bud_ok
-        if cfg.shaping == SHAPING_SW:
-            elig = jnp.logical_and(elig, jnp.logical_not(is_stall))
+        elig = (have & tok_ok & aq_room & cred_ok & bud_ok & fl_mask
+                & jnp.logical_not(is_stall))
 
-        # arbiter key (lower = served first)
-        rr_key = ((iota_n - c["rr_ptr"] - 1) % N).astype(jnp.float32)
-        if cfg.arbiter == ARB_RR:
-            key = rr_key
-        elif cfg.arbiter in (ARB_WRR, ARB_WFQ):
-            key = c["vft"] + 1e-6 * rr_key
-        elif cfg.arbiter == ARB_PRIORITY:
-            key = -fl_prio * 1e6 + rr_key
-        else:
-            raise ValueError(cfg.arbiter)
+        # arbiter key (lower = served first), selected by the traced mode
+        # word; RR cycles over the *active* flows only
+        rr_key = ((iota_n - c["rr_ptr"] - 1) % n_act).astype(jnp.float32)
+        key = jnp.where(
+            arb_rr, rr_key,
+            jnp.where(arb == ARB_PRIORITY, -fl_prio * 1e6 + rr_key,
+                      c["vft"] + 1e-6 * rr_key))        # WRR / WFQ
         key = jnp.where(elig, key, jnp.float32(3e38))
         return head_sz, head_at, cost, elig, key
 
@@ -330,10 +460,9 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         sz = head_sz[g]
         at = head_at[g]
         onehot = (iota_n == g) & ok
-        # consume tokens
-        if shaped:
-            c["tb"] = c["tb"]._replace(
-                tokens=c["tb"].tokens - jnp.where(onehot, cost, 0))
+        # consume tokens (transparent when unshaped)
+        c["tb"] = c["tb"]._replace(
+            tokens=c["tb"].tokens - jnp.where(onehot & shaped, cost, 0))
         # pop flow queue
         c["q_head"] = (c["q_head"] + onehot) % cfg.qlen
         c["q_cnt"] = c["q_cnt"] - onehot
@@ -358,11 +487,9 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         # per round — how the paper's Host_noTS FPGA arbiter behaves,
         # letting large messages steal bytes); WFQ is byte-granular.
         c["rr_ptr"] = jnp.where(ok, g, c["rr_ptr"])
-        if cfg.arbiter == ARB_WRR:
-            c["vft"] = c["vft"] + jnp.where(onehot, 1.0 / fl_w, 0.0)
-        else:
-            c["vft"] = c["vft"] + jnp.where(
-                onehot, sz.astype(jnp.float32) / fl_w, 0.0)
+        vft_inc = jnp.where(arb == ARB_WRR, jnp.float32(1.0),
+                            sz.astype(jnp.float32)) / fl_w
+        c["vft"] = c["vft"] + jnp.where(onehot, vft_inc, 0.0)
         # counters
         c["c_adm_msgs"] = c["c_adm_msgs"] + onehot.astype(jnp.int32)
         lo = c["c_adm_b_lo"] + jnp.where(onehot, sz, 0)
@@ -374,8 +501,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         c, budget = _fori(cfg.k_grant, grant_body, (c, budget))
         return c, budget
 
-    use_fast = (cfg.grant_fast and cfg.arbiter == ARB_RR
-                and cfg.k_grant > 1 and N > 1)
+    use_fast = cfg.grant_fast and cfg.k_grant > 1 and N > 1
     if use_fast:
         # One-shot grant selection for the common uncontended RR tick.
         # Sorting eligible flows by the RR key visits them in exactly the
@@ -389,7 +515,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         #   (b) no flow could be granted twice (either >= k_grant flows
         #       are eligible, or every eligible flow has a single queued
         #       message).
-        # Any contended tick falls back to the sequential loop.
+        # Any contended (or non-RR) tick falls back to the sequential loop.
         K = min(cfg.k_grant, N)
         head_sz, head_at, cost, elig, key = grant_inputs(carry, budget)
         order = jnp.argsort(key)[:K]             # candidate flows, RR order
@@ -420,7 +546,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         n_elig = jnp.sum(elig.astype(jnp.int32))
         regrant_safe = ((n_elig >= cfg.k_grant)
                         | jnp.all(~elig | (carry["q_cnt"] <= 1)))
-        fast_pred = ok_all & regrant_safe
+        fast_pred = ok_all & regrant_safe & arb_rr
 
         # Under vmap (run_window_batch) this cond lowers to a select that
         # evaluates BOTH branches per lane.  That waste is accepted on
@@ -432,10 +558,9 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         # set SimConfig.grant_fast=False on both sides.
         def vec_grants(c, budget, order, valid, vi, csz, cat, ccost,
                        cdir, d01, cacc, spend, cnt_before):
-            if shaped:
-                c["tb"] = c["tb"]._replace(
-                    tokens=c["tb"].tokens.at[order].add(
-                        -jnp.where(valid, ccost, 0)))
+            c["tb"] = c["tb"]._replace(
+                tokens=c["tb"].tokens.at[order].add(
+                    -jnp.where(valid & shaped, ccost, 0)))
             c["q_head"] = (c["q_head"]
                            + jnp.zeros((N,), jnp.int32).at[order].add(vi)) \
                 % cfg.qlen
@@ -455,8 +580,9 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
                 jnp.where(valid, csz, 0))
             c["rr_ptr"] = jnp.where(
                 n_g > 0, order[jnp.maximum(n_g - 1, 0)], c["rr_ptr"])
-            c["vft"] = c["vft"].at[order].add(
-                jnp.where(valid, csz.astype(jnp.float32) / fl_w[order], 0.0))
+            vft_inc = jnp.where(arb == ARB_WRR, jnp.float32(1.0),
+                                csz.astype(jnp.float32)) / fl_w[order]
+            c["vft"] = c["vft"].at[order].add(jnp.where(valid, vft_inc, 0.0))
             c["c_adm_msgs"] = c["c_adm_msgs"].at[order].add(vi)
             lo = c["c_adm_b_lo"].at[order].add(jnp.where(valid, csz, 0))
             c["c_adm_b_hi"] = c["c_adm_b_hi"] + (lo >> 20)
@@ -470,7 +596,9 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
     else:
         carry, budget = seq_grants(carry, budget)
 
-    # -- 5. accelerator service (one accel per iteration) -------------
+    # -- 5. accelerator service --------------------------------------
+    # sequential reference: one accel per iteration, pass-major order
+    # (iteration i serves accel i % A on pass i // A)
     def srv_body(i, c):
         a = i % A
         lanes_a = c["lanes"][a]
@@ -493,14 +621,14 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
             % cfg.aq_len
         c["aq_cnt"] = c["aq_cnt"].at[a].add(-ok.astype(jnp.int32))
         c["aq_bytes"] = c["aq_bytes"].at[a].add(jnp.where(ok, -sz, 0))
-        # host-processing delay (software-mediated shaping only)
-        if cfg.shaping == SHAPING_SW:
-            r = c["rng"] * _LCG_A + _LCG_C
-            c["rng"] = r
-            u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
-            hostd = cfg.sw_host_delay_cycles + (u ** 4) * cfg.sw_jitter_cycles
-        else:
-            hostd = jnp.float32(0.0)
+        # host-processing delay (software-mediated shaping only; the LCG
+        # advances once per iteration whenever shaping is software, busy
+        # or idle, exactly like the closed-form batch draw below)
+        r = c["rng"] * _LCG_A + _LCG_C
+        c["rng"] = jnp.where(sw, r, c["rng"])
+        u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
+        hostd = jnp.where(sw, args["sw_delay"] + (u ** 4) * args["sw_jit"],
+                          jnp.float32(0.0))
         ready = (end + hostd).astype(jnp.int32)
         # egress queue push
         d = fl_eg_dir[fl]
@@ -521,7 +649,89 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         c["eq_cnt"] = c["eq_cnt"].at[d].add(okq.astype(jnp.int32))
         return c
 
-    carry = _fori(A * cfg.k_srv, srv_body, carry)
+    def seq_srv(c):
+        return _fori(A * cfg.k_srv, srv_body, c)
+
+    # Vectorized service pays off only once the stage is wide enough:
+    # measured on XLA-CPU, narrow service (A * k_srv < 8) next to the
+    # vectorized egress stage fuses pathologically (3x slower than the
+    # unrolled loop), while wide stages gain 2-4x.  The threshold is
+    # static, so serial and batched runs always take the same path.
+    if cfg.stage_fast and A * cfg.k_srv >= 8:
+        # Prefix-sum slot assignment (the treatment PR 1 gave RR grants):
+        # sort each accelerator's lanes by busy-time; the k-th queued
+        # message starts on the k-th least-busy lane.  This equals the
+        # sequential argmin walk whenever no assigned lane frees again
+        # within this tick (its end >= now_end): assigned lanes then sort
+        # strictly after every still-free lane, so the sequential argmin
+        # sequence is exactly the sorted order.  A chaining tick (tiny
+        # service times) falls back to the sequential loop.
+        Ks = cfg.k_srv
+        ia = jnp.arange(A, dtype=jnp.int32)
+        kk = jnp.arange(Ks, dtype=jnp.int32)
+        kl = jnp.minimum(kk, cfg.lmax - 1)
+        sl = jnp.sort(carry["lanes"], axis=1)[:, kl]       # [A, Ks]
+        si = jnp.argsort(carry["lanes"], axis=1)[:, kl].astype(jnp.int32)
+        free = (sl < jnp.float32(now_end)) & (kk < cfg.lmax)[None, :]
+        have = kk[None, :] < carry["aq_cnt"][:, None]
+        s_ok = free & have                                  # prefix rows
+        aslot = (carry["aq_head"][:, None] + kk[None, :]) % cfg.aq_len
+        s_sz = carry["aq_sz"][ia[:, None], aslot]
+        s_fl = carry["aq_fl"][ia[:, None], aslot]
+        s_at = carry["aq_at"][ia[:, None], aslot]
+        s_svc = _interp_mat(svc_tab, s_sz.astype(jnp.float32))
+        s_esz = _interp_mat(eg_tab, s_sz.astype(jnp.float32))
+        s_esz = jnp.where(fl_eg_full[s_fl], s_sz.astype(jnp.float32), s_esz)
+        s_end = jnp.maximum(sl, jnp.float32(now)) + s_svc
+        srv_fast = jnp.all(~s_ok | (s_end >= jnp.float32(now_end)))
+
+        def vec_srv(c, s_ok, si, s_sz, s_fl, s_at, s_esz, s_end):
+            n_start = s_ok.astype(jnp.int32).sum(1)
+            lrow = jnp.where(s_ok, ia[:, None], A)   # OOB rows are dropped
+            c["lanes"] = c["lanes"].at[lrow, si].set(s_end, mode="drop")
+            c["aq_head"] = (c["aq_head"] + n_start) % cfg.aq_len
+            c["aq_cnt"] = c["aq_cnt"] - n_start
+            c["aq_bytes"] = c["aq_bytes"] - jnp.where(s_ok, s_sz, 0).sum(1)
+            # host-processing delay: closed-form LCG draw for iteration
+            # i = k*A + a, bitwise-equal to the sequential per-step update
+            powv, sumv = _lcg_tables(A * Ks)
+            it = kk[None, :] * A + ia[:, None]               # [A, Ks]
+            r = c["rng"] * jnp.asarray(powv)[it] + jnp.asarray(sumv)[it]
+            c["rng"] = jnp.where(sw, c["rng"] * powv[-1] + sumv[-1],
+                                 c["rng"])
+            u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
+            hostd = jnp.where(sw, args["sw_delay"]
+                              + (u ** 4) * args["sw_jit"], jnp.float32(0.0))
+            ready = (s_end + hostd).astype(jnp.int32)
+            # egress pushes in sequential iteration order (k-major flatten)
+            flat = lambda x: x.T.reshape(-1)                 # noqa: E731
+            okf = flat(s_ok)
+            d = fl_eg_dir[flat(s_fl)]
+            Mt = A * Ks
+            lt = jnp.tril(jnp.ones((Mt, Mt), jnp.int32), -1)
+            same_d = (d[None, :] == d[:, None]).astype(jnp.int32)
+            rank = (lt * same_d) @ okf.astype(jnp.int32)
+            okq = okf & (c["eq_cnt"][d] + rank < cfg.eq_len)
+            eslot = (c["eq_head"][d] + c["eq_cnt"][d] + rank) % cfg.eq_len
+            drow = jnp.where(okq, d, 3)           # OOB rows are dropped
+            c["eq_sz"] = c["eq_sz"].at[drow, eslot].set(
+                jnp.maximum(flat(s_esz).astype(jnp.int32), 1), mode="drop")
+            c["eq_isz"] = c["eq_isz"].at[drow, eslot].set(
+                flat(s_sz), mode="drop")
+            c["eq_fl"] = c["eq_fl"].at[drow, eslot].set(
+                flat(s_fl), mode="drop")
+            c["eq_at"] = c["eq_at"].at[drow, eslot].set(
+                flat(s_at), mode="drop")
+            c["eq_rd"] = c["eq_rd"].at[drow, eslot].set(
+                flat(ready), mode="drop")
+            c["eq_cnt"] = c["eq_cnt"] + jnp.zeros((3,), jnp.int32) \
+                .at[d].add(okq.astype(jnp.int32))
+            return c
+
+        carry = jax.lax.cond(srv_fast, vec_srv, lambda c, *_a: seq_srv(c),
+                             carry, s_ok, si, s_sz, s_fl, s_at, s_esz, s_end)
+    else:
+        carry = seq_srv(carry)
 
     # -- 6. egress link + completions ----------------------------------
     dirs = jnp.arange(3, dtype=jnp.int32)
@@ -570,7 +780,66 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
             jnp.where(pop, lat.astype(jnp.float32), 0.0))
         return c, budget
 
-    carry, budget = _fori(cfg.k_eg, eg_body, (carry, budget))
+    if cfg.stage_fast:
+        # Vectorized egress: gather the next k_eg ring entries of every
+        # direction at once.  Pops per direction are a prefix (a head that
+        # is not ready / not funded stays at the head for the rest of the
+        # tick), so one cumulative-AND replaces the k_eg-iteration loop.
+        # The budget chain is evaluated in the exact sequential subtraction
+        # order to keep the carried link debt bitwise-identical.
+        Ke = cfg.k_eg
+        jj = jnp.arange(Ke, dtype=jnp.int32)
+        eh = (carry["eq_head"][:, None] + jj[None, :]) % cfg.eq_len
+        e_sz = carry["eq_sz"][dirs[:, None], eh]
+        e_isz = carry["eq_isz"][dirs[:, None], eh]
+        e_fl = carry["eq_fl"][dirs[:, None], eh]
+        e_at = carry["eq_at"][dirs[:, None], eh]
+        e_rd = carry["eq_rd"][dirs[:, None], eh]
+        e_have = jj[None, :] < carry["eq_cnt"][:, None]
+        e_ready = e_rd < now_end
+        spend_mat = jnp.where((dirs < 2)[:, None],
+                              e_sz.astype(jnp.float32) + ovh, 0.0)
+        pops, prev = [], jnp.ones((3,), bool)
+        b_run = budget
+        for j in range(Ke):
+            bud_ok = jnp.concatenate(
+                [b_run, jnp.asarray([3e38], jnp.float32)]) > 0.0
+            pop_j = prev & e_have[:, j] & e_ready[:, j] & bud_ok
+            b_run = b_run - jnp.where(pop_j[:2], spend_mat[:2, j], 0.0)
+            pops.append(pop_j)
+            prev = pop_j
+        pop = jnp.stack(pops, axis=1)                       # [3, Ke]
+        budget = b_run
+        npop = pop.astype(jnp.int32).sum(1)
+        carry["eq_head"] = (carry["eq_head"] + npop) % cfg.eq_len
+        carry["eq_cnt"] = carry["eq_cnt"] - npop
+        carry["credits_used"] = carry["credits_used"] - npop.sum()
+        ser = jnp.where((dirs < 2)[:, None],
+                        e_sz.astype(jnp.float32)
+                        / bpc[jnp.minimum(dirs, 1)][:, None], 0.0)
+        comp_time = jnp.maximum(e_rd, now) + ser.astype(jnp.int32)
+        lat = comp_time - e_at
+        # completion ring in sequential (iteration, direction) order
+        flat = lambda x: x.T.reshape(-1)                    # noqa: E731
+        popf = flat(pop)
+        offs = jnp.cumsum(popf.astype(jnp.int32)) - popf.astype(jnp.int32)
+        idx = jnp.where(popf, (carry["comp_n"] + offs) % cfg.comp_cap,
+                        cfg.comp_cap)
+        carry["comp_fl"] = carry["comp_fl"].at[idx].set(flat(e_fl))
+        carry["comp_lat"] = carry["comp_lat"].at[idx].set(flat(lat))
+        carry["comp_t"] = carry["comp_t"].at[idx].set(flat(comp_time))
+        carry["comp_sz"] = carry["comp_sz"].at[idx].set(flat(e_isz))
+        carry["comp_n"] = carry["comp_n"] + npop.sum()
+        carry["c_done_msgs"] = carry["c_done_msgs"].at[flat(e_fl)].add(
+            popf.astype(jnp.int32))
+        lo = carry["c_done_b_lo"].at[flat(e_fl)].add(
+            jnp.where(popf, flat(e_isz), 0))
+        carry["c_done_b_hi"] = carry["c_done_b_hi"] + (lo >> 20)
+        carry["c_done_b_lo"] = lo & 0xFFFFF
+        carry["c_lat_sum"] = carry["c_lat_sum"].at[flat(e_fl)].add(
+            jnp.where(popf, flat(lat).astype(jnp.float32), 0.0))
+    else:
+        carry, budget = _fori(cfg.k_eg, eg_body, (carry, budget))
 
     # Positive leftover budget is lost (a link cannot save idle time);
     # negative budget (serialization debt of in-flight messages) carries.
@@ -642,24 +911,35 @@ def run_window(flows: FlowSet, accels: AccelTable, link: LinkSpec,
         carry = init_carry(flows, accels, cfg, tb_state)
     else:
         carry = reconfigure_carry(carry, tb_state)
-    key = ("single", cfg, _args_sig(args))
+    key = ("single", _static_cfg(cfg), _args_sig(args))
     run = _get_run(key, lambda: jax.jit(
-        functools.partial(_run_core, cfg), donate_argnums=(0,)))
+        functools.partial(_run_core, _static_cfg(cfg)),
+        donate_argnums=(0,)))
     return run(carry, args)
 
 
-def run_window_batch(flows: FlowSet,
+def _as_list(x, B):
+    return list(x) if isinstance(x, (list, tuple)) else [x] * B
+
+
+def run_window_batch(flows: FlowSet | Sequence[FlowSet],
                      accels: AccelTable | Sequence[AccelTable],
                      link: LinkSpec | Sequence[LinkSpec],
-                     cfg: SimConfig, tb_states: Sequence[tb.TBState],
+                     cfg: SimConfig | Sequence[SimConfig],
+                     tb_states: Sequence[tb.TBState],
                      arr_t, arr_sz, stall_mask=None, *,
                      t0_ticks: int = 0) -> dict:
     """Run B independent windows in one compiled ``jax.vmap`` call.
 
-    Batched per element: arrival trace, TBState registers, and (optionally,
-    when sequences are passed) accelerator tables and link specs.  Shared:
-    flow set shape/routing, SimConfig, window start, and — unless a [B, T]
-    array is given — the stall mask.  Returns the raw batched carry."""
+    Batched per element: arrival trace, TBState registers, and (when
+    sequences are passed) flow sets, SimConfigs, accelerator tables, link
+    specs and ``[B, T]`` stall masks.  Flow sets may have *different flow
+    counts*: they are padded to the largest count and masked (``fl_mask``),
+    with counters of active lanes bitwise-equal to unpadded serial runs.
+    SimConfigs may differ only in the traced mode fields
+    (``TRACED_CFG_FIELDS``: shaping, arbiter, software-delay model) — the
+    structural fields form the single compile signature.  Returns the raw
+    batched carry."""
     arr_t = np.asarray(arr_t)
     arr_sz = np.asarray(arr_sz)
     if arr_t.ndim != 3:
@@ -667,31 +947,69 @@ def run_window_batch(flows: FlowSet,
             f"arr_t must be [B, N, M] (got ndim={arr_t.ndim}) — "
             "see stack_arrivals()")
     B = arr_t.shape[0]
-    accels_l = list(accels) if isinstance(accels, (list, tuple)) \
-        else [accels] * B
-    links_l = list(link) if isinstance(link, (list, tuple)) else [link] * B
+    flows_l = _as_list(flows, B)
+    accels_l = _as_list(accels, B)
+    links_l = _as_list(link, B)
+    cfgs_l = _as_list(cfg, B)
     if not (len(accels_l) == B and len(links_l) == B
-            and len(tb_states) == B):
+            and len(tb_states) == B and len(flows_l) == B
+            and len(cfgs_l) == B):
         raise ValueError(
             f"batch size mismatch: arr_t has B={B} but "
-            f"accels={len(accels_l)}, links={len(links_l)}, "
-            f"tb_states={len(tb_states)}")
+            f"flows={len(flows_l)}, accels={len(accels_l)}, "
+            f"links={len(links_l)}, tb_states={len(tb_states)}, "
+            f"cfgs={len(cfgs_l)}")
+    cfg0 = cfgs_l[0]
+    if any(_static_cfg(c) != _static_cfg(cfg0) for c in cfgs_l[1:]):
+        raise ValueError(
+            "batched SimConfigs may differ only in traced fields "
+            f"{TRACED_CFG_FIELDS}")
+    for c in cfgs_l[1:]:
+        _check_modes(c)    # element 0 is checked by _pack_args below
+    if any(a.n != accels_l[0].n for a in accels_l[1:]):
+        raise ValueError("all batch elements must share the accel count")
 
+    n_max = max(f.n for f in flows_l)
+    if arr_t.shape[1] != n_max:
+        raise ValueError(
+            f"arr_t flow axis {arr_t.shape[1]} != n_flows_max {n_max} — "
+            "see stack_arrivals()")
+
+    flows_batched = (isinstance(flows, (list, tuple))
+                     and (len(set(f.n for f in flows_l)) > 1
+                          or any(f is not flows_l[0] for f in flows_l)))
     accel_batched = isinstance(accels, (list, tuple))
     link_batched = isinstance(link, (list, tuple))
-    stall_batched = (stall_mask is not None
-                     and np.asarray(stall_mask).ndim == 2)
+    cfg_batched = (isinstance(cfg, (list, tuple))
+                   and any(c != cfg0 for c in cfgs_l[1:]))
+    stall_np = None if stall_mask is None else np.asarray(stall_mask, bool)
+    stall_batched = stall_np is not None and stall_np.ndim == 2
 
     # pack with tiny placeholders for the per-element entries (the real
     # batched trace / stall arrays replace them below) so a multi-megabyte
     # single-element trace is never uploaded just to be discarded
-    ph = np.zeros((arr_t.shape[1], 1), np.int32)
-    args = _pack_args(flows, accels_l[0], links_l[0], cfg,
-                      ph, ph, np.zeros(1, bool), t0_ticks)
+    ph = np.zeros((n_max, 1), np.int32)
+    flows0 = flows_l[0] if flows_l[0].n == n_max else flows_l[
+        int(np.argmax([f.n for f in flows_l]))]
+    args = _pack_args(flows0, accels_l[0], links_l[0], cfg0,
+                      ph, ph, None, t0_ticks)
     axes = {k: None for k in args}
     args["arr_t"] = jnp.asarray(arr_t, jnp.int32)
     args["arr_sz"] = jnp.asarray(arr_sz, jnp.int32)
     axes["arr_t"] = axes["arr_sz"] = 0
+    if flows_batched:
+        per_el = [_flow_args(f, n_max) for f in flows_l]
+        for k in per_el[0]:
+            args[k] = jnp.stack([jnp.asarray(p[k]) for p in per_el])
+            axes[k] = 0
+    if cfg_batched:
+        args["mode"] = jnp.asarray([c.shaping for c in cfgs_l], jnp.int32)
+        args["arb"] = jnp.asarray([c.arbiter for c in cfgs_l], jnp.int32)
+        args["sw_delay"] = jnp.asarray(
+            [c.sw_host_delay_cycles for c in cfgs_l], jnp.float32)
+        args["sw_jit"] = jnp.asarray(
+            [c.sw_jitter_cycles for c in cfgs_l], jnp.float32)
+        axes["mode"] = axes["arb"] = axes["sw_delay"] = axes["sw_jit"] = 0
     if accel_batched:
         args["svc_tab"] = jnp.stack(
             [jnp.asarray(a.service_cycles, jnp.float32) for a in accels_l])
@@ -705,19 +1023,20 @@ def run_window_batch(flows: FlowSet,
             [l.msg_overhead_bytes for l in links_l], jnp.float32)
         args["credits"] = jnp.asarray([l.credits for l in links_l], jnp.int32)
         axes["bpc"] = axes["ovh"] = axes["credits"] = 0
-    if cfg.shaping == SHAPING_SW:
-        if stall_mask is None:
-            stall_mask = np.zeros(int(t0_ticks) + cfg.n_ticks, bool)
-        args["stall"] = jnp.asarray(stall_mask, bool)
+    if stall_np is not None:
+        args["stall"] = jnp.asarray(
+            _window_stall(stall_np, cfg0, t0_ticks), bool)
         axes["stall"] = 0 if stall_batched else None
 
-    carries = [init_carry(flows, accels_l[b], cfg, tb_states[b])
+    carries = [init_carry(flows_l[b], accels_l[b], cfg0,
+                          pad_tb_state(tb_states[b], n_max), n_flows=n_max)
                for b in range(B)]
     carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
 
-    key = ("batch", cfg, B, _args_sig(args),
+    key = ("batch", _static_cfg(cfg0), B, _args_sig(args),
            tuple(sorted(axes.items())))
     run = _get_run(key, lambda: jax.jit(
-        jax.vmap(functools.partial(_run_core, cfg), in_axes=(0, axes)),
+        jax.vmap(functools.partial(_run_core, _static_cfg(cfg0)),
+                 in_axes=(0, axes)),
         donate_argnums=(0,)))
     return run(carry, args)

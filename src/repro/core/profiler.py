@@ -11,12 +11,21 @@ dataplane simulation and records the aggregate achievable capacity and the
 per-flow split.  Entries carry a 1-bit SLO-Friendly / SLO-Violating tag,
 evaluated against a concrete SLO vector at query time (and re-run whenever a
 new flow registers, Sec. 5.3.2).
+
+Contexts are stored in *canonical order* (sorted by (path, msg bucket, load
+decile)); ``per_flow_gbps`` follows that order, so a cache hit from a
+permuted caller context still lines up.  ``profile_contexts`` batches many
+heterogeneous contexts — different flow counts, different accelerators —
+into a single ragged ``simulate_batch`` call: one compiled engine executes
+the whole Capacity(t, X, N) sweep instead of one compile-bound serial run
+per context.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import json
+from typing import Sequence
 
 import numpy as np
 
@@ -24,7 +33,8 @@ from repro.core import baselines, token_bucket as tb
 from repro.core.accelerator import AccelTable, AcceleratorSpec
 from repro.core.flow import (SLO, FlowSet, FlowSpec, Path, TrafficPattern)
 from repro.core.interconnect import ARB_RR, LinkSpec
-from repro.core.sim import SHAPING_NONE, SimConfig, gen_arrivals, simulate
+from repro.core.sim import (SHAPING_NONE, SimConfig, gen_arrivals, simulate,
+                            simulate_batch, stack_arrivals)
 
 
 def msg_bucket(msg_bytes: int) -> int:
@@ -32,11 +42,27 @@ def msg_bucket(msg_bytes: int) -> int:
     return int(np.clip(np.round(np.log2(max(msg_bytes, 1))), 6, 20))
 
 
+def canonical_order(flows: list[tuple[Path, int, float]]) -> list[int]:
+    """Indices sorting a context into canonical (path, msg bucket, load
+    decile) order — the single source of truth for how
+    ``CapacityEntry.per_flow_gbps`` (and any positional SLO vector fed to
+    ``slo_tag``) is ordered."""
+    return sorted(range(len(flows)),
+                  key=lambda i: (int(flows[i][0]), msg_bucket(flows[i][1]),
+                                 int(round(flows[i][2] * 10))))
+
+
+def canonical_context(flows: list[tuple[Path, int, float]]
+                      ) -> list[tuple[Path, int, float]]:
+    """Context flows in canonical order (see ``canonical_order``)."""
+    return [flows[i] for i in canonical_order(flows)]
+
+
 def context_key(accel_name: str,
                 flows: list[tuple[Path, int, float]]) -> str:
     """Canonical context: accel + sorted (path, msg bucket, load decile)."""
-    parts = sorted((int(p), msg_bucket(m), int(round(l * 10)))
-                   for p, m, l in flows)
+    parts = [(int(p), msg_bucket(m), int(round(l * 10)))
+             for p, m, l in canonical_context(flows)]
     return accel_name + "|" + ";".join(f"{p}.{m}.{l}" for p, m, l in parts)
 
 
@@ -49,9 +75,36 @@ class CapacityEntry:
 
     def slo_tag(self, slo_gbps: list[float], margin: float = 0.02) -> bool:
         """True = SLO-Friendly: requested SLOs fit the profiled capacity and
-        no single SLO exceeds what contention lets one flow reach."""
-        total_ok = sum(slo_gbps) <= self.capacity_gbps * (1 - margin)
-        return bool(total_ok)
+        no single SLO exceeds what contention lets one flow reach.
+
+        The per-flow ceiling is ``n * per_flow_gbps[i]``: a flow whose
+        contended fair split is g can at best inherit the other n-1 flows'
+        arbiter rounds when shaping throttles them, i.e. ~n x g — a
+        small-message flow cannot be promised a large-message flow's rate
+        no matter how the others are shaped (Fig. 7 heterogeneity).
+        ``slo_gbps`` aligns positionally with ``per_flow_gbps`` (canonical
+        context order) when the lengths match; aggregate-style queries
+        (fewer SLOs than profiled flows) are checked against the best
+        single-flow ceiling."""
+        cap = self.capacity_gbps * (1 - margin)
+        if sum(slo_gbps) > cap:
+            return False
+        n = len(self.per_flow_gbps)
+        ceil = [n * g * (1 - margin) for g in self.per_flow_gbps]
+        if n and len(slo_gbps) == n:
+            return all(s <= c for s, c in zip(slo_gbps, ceil))
+        best = max(ceil, default=cap)
+        return all(s <= best for s in slo_gbps)
+
+
+def _context_specs(flows: list[tuple[Path, int, float]]) -> list[FlowSpec]:
+    return [
+        FlowSpec(i, i, p, 0,
+                 TrafficPattern(msg_bytes=m, load=max(l, 0.99),
+                                process="poisson"),
+                 SLO.gbps(1e9), weight=1.0)
+        for i, (p, m, l) in enumerate(canonical_context(flows))
+    ]
 
 
 class ProfileTable:
@@ -65,6 +118,18 @@ class ProfileTable:
         self.n_ticks = n_ticks
         self.tick_cycles = tick_cycles
 
+    def _cfg(self) -> SimConfig:
+        return SimConfig(n_ticks=self.n_ticks, tick_cycles=self.tick_cycles,
+                         shaping=SHAPING_NONE, arbiter=ARB_RR)
+
+    def _entry_from_result(self, key: str, res, n: int) -> CapacityEntry:
+        per = [res.mean_ingress_gbps(i, None) for i in range(n)]
+        x = np.asarray(per)
+        fair = float((x.sum() ** 2) / (len(x) * (x ** 2).sum() + 1e-12))
+        entry = CapacityEntry(float(x.sum()), per, fair, key)
+        self.entries[key] = entry
+        return entry
+
     # -- profiling ------------------------------------------------------
     def profile_context(self, accel: AcceleratorSpec,
                         flows: list[tuple[Path, int, float]],
@@ -72,38 +137,69 @@ class ProfileTable:
         key = context_key(accel.name, flows)
         if key in self.entries:
             return self.entries[key]
-        specs = [
-            FlowSpec(i, i, p, 0,
-                     TrafficPattern(msg_bytes=m, load=max(l, 0.99),
-                                    process="poisson"),
-                     SLO.gbps(1e9), weight=1.0)
-            for i, (p, m, l) in enumerate(flows)
-        ]
+        specs = _context_specs(flows)
         fset = FlowSet.build(specs)
         atab = AccelTable.build([accel])
-        cfg = SimConfig(n_ticks=self.n_ticks, tick_cycles=self.tick_cycles,
-                        shaping=SHAPING_NONE, arbiter=ARB_RR)
+        cfg = self._cfg()
         ref = {i: accel.peak_gbps for i in range(len(specs))}
         arr_t, arr_sz = gen_arrivals(fset, cfg, seed=seed, load_ref_gbps=ref)
         tbs = baselines.make_tb_state(baselines.HOST_NO_TS,
                                       [tb.TBParams(1, 1, 1)] * len(specs))
         res = simulate(fset, atab, self.link, cfg, tbs, arr_t, arr_sz)
-        per = [res.mean_ingress_gbps(i, fset) for i in range(len(specs))]
-        x = np.asarray(per)
-        fair = float((x.sum() ** 2) / (len(x) * (x ** 2).sum() + 1e-12))
-        entry = CapacityEntry(float(x.sum()), per, fair, key)
-        self.entries[key] = entry
-        return entry
+        return self._entry_from_result(key, res, len(specs))
+
+    def profile_contexts(self,
+                         contexts: Sequence[tuple[AcceleratorSpec,
+                                                  list[tuple[Path, int,
+                                                             float]]]],
+                         *, seed: int = 0) -> list[CapacityEntry]:
+        """Profile many heterogeneous contexts in ONE compiled engine call.
+
+        ``contexts`` is a sequence of (accelerator, flows) pairs; flow
+        counts may differ (the engine pads + flow-masks the batch) and each
+        element carries its own accelerator table.  Already-profiled or
+        duplicate contexts are deduplicated against the cache, so only the
+        misses are simulated — as one ragged ``simulate_batch``.  Entries
+        are bitwise-identical to what serial ``profile_context`` calls
+        produce (the masked engine's counters match unpadded serial runs).
+        """
+        keys = [context_key(a.name, f) for a, f in contexts]
+        todo: dict[str, tuple[AcceleratorSpec, list]] = {}
+        for (accel, flows), key in zip(contexts, keys):
+            if key not in self.entries and key not in todo:
+                todo[key] = (accel, flows)
+        if todo:
+            cfg = self._cfg()
+            fsets, atabs, tbss, arrs, ns = [], [], [], [], []
+            for accel, flows in todo.values():
+                specs = _context_specs(flows)
+                fset = FlowSet.build(specs)
+                ref = {i: accel.peak_gbps for i in range(len(specs))}
+                fsets.append(fset)
+                atabs.append(AccelTable.build([accel]))
+                tbss.append(baselines.make_tb_state(
+                    baselines.HOST_NO_TS,
+                    [tb.TBParams(1, 1, 1)] * len(specs)))
+                arrs.append(gen_arrivals(fset, cfg, seed=seed,
+                                         load_ref_gbps=ref))
+                ns.append(len(specs))
+            results = simulate_batch(fsets, atabs, self.link, cfg, tbss,
+                                     *stack_arrivals(arrs))
+            for key, res, n in zip(todo, results, ns):
+                self._entry_from_result(key, res, n)
+        return [self.entries[k] for k in keys]
 
     def sweep(self, accel: AcceleratorSpec, *, paths=(Path.FUNCTION_CALL,),
               msg_sizes=(64, 512, 4096), loads=(0.9,),
               n_flows=(1, 2)) -> None:
-        """Offline sweep: "all contention cases are swept and recorded"."""
+        """Offline sweep: "all contention cases are swept and recorded" —
+        executed as one batched ragged engine call across every context."""
+        contexts = []
         for n in n_flows:
             combos = itertools.combinations_with_replacement(
                 itertools.product(paths, msg_sizes, loads), n)
-            for combo in combos:
-                self.profile_context(accel, list(combo))
+            contexts.extend((accel, list(combo)) for combo in combos)
+        self.profile_contexts(contexts)
 
     # -- queries --------------------------------------------------------
     def lookup(self, accel_name: str,

@@ -23,7 +23,7 @@ from repro.core.accelerator import AccelTable, AcceleratorSpec
 from repro.core.flow import (PATH_EGRESS_DIR, PATH_INGRESS_DIR, SLO, FlowSet,
                              FlowSpec, Path, SLOKind)
 from repro.core.interconnect import ARB_RR, LinkSpec
-from repro.core.profiler import ProfileTable
+from repro.core.profiler import ProfileTable, canonical_order
 from repro.core.shaper import reshape_decision
 from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals, simulate
 
@@ -81,18 +81,18 @@ class ArcusRuntime:
         return True
 
     def _admission_control(self, spec: FlowSpec) -> bool:
-        """CapacityPlanning(CHECK): profiled capacity for the would-be
-        context minus already-committed SLOs must cover the new SLO."""
+        """CapacityPlanning(CHECK): the profiled capacity of the would-be
+        context must cover every flow's SLO — in aggregate, and per flow
+        (a small-message flow cannot be promised more than contention lets
+        one flow reach, see ``CapacityEntry.slo_tag``)."""
         accel = self.accel_specs[spec.accel_id]
-        ctx = [(s.spec.path, s.spec.pattern.msg_bytes, s.spec.pattern.load)
-               for s in self.table.values()
-               if s.spec.accel_id == spec.accel_id]
-        ctx.append((spec.path, spec.pattern.msg_bytes, spec.pattern.load))
+        peers = [s.spec for s in self.table.values()
+                 if s.spec.accel_id == spec.accel_id] + [spec]
+        ctx = [(s.path, s.pattern.msg_bytes, s.pattern.load) for s in peers]
         entry = self.profile.capacity(accel, ctx)
-        committed = sum(self._slo_gbps(s.spec) for s in self.table.values()
-                        if s.spec.accel_id == spec.accel_id)
-        want = self._slo_gbps(spec)
-        return entry.slo_tag([committed + want])
+        # per-flow SLO vector in the entry's canonical context order
+        return entry.slo_tag([self._slo_gbps(peers[i])
+                              for i in canonical_order(ctx)])
 
     def _slo_gbps(self, spec: FlowSpec) -> float:
         if spec.slo.kind == SLOKind.GBPS:
@@ -118,6 +118,10 @@ class ArcusRuntime:
         each window (device buffers are reused in place, never copied back
         to the host between windows).
 
+        A trailing partial window (``total_ticks % window_ticks != 0``) runs
+        as one final short window — a second engine-cache entry, not a
+        silently dropped tail.
+
         Returns (SimResult of the last window — containing the full
         completion history ring — and the list of WindowReports)."""
         flows = self._flowset()
@@ -136,12 +140,17 @@ class ArcusRuntime:
         reports: list[WindowReport] = []
         result = None
         self._prev_counters = None
-        for w in range(total_ticks // window_ticks):
+        n_full, rem = divmod(total_ticks, window_ticks)
+        windows = [(w * window_ticks, cfg) for w in range(n_full)]
+        if rem:
+            windows.append((n_full * window_ticks,
+                            dataclasses.replace(cfg, n_ticks=rem)))
+        for t0, wcfg in windows:
             tbs = tb.pack([self.table[f].params for f in sorted(self.table)])
             result, carry = simulate(
-                flows, atab, self.link, cfg, tbs, arr_t, arr_sz,
-                t0_ticks=w * window_ticks, carry=carry, return_carry=True)
-            reports.append(self._algorithm1_pass(result, cfg))
+                flows, atab, self.link, wcfg, tbs, arr_t, arr_sz,
+                t0_ticks=t0, carry=carry, return_carry=True)
+            reports.append(self._algorithm1_pass(result, wcfg))
             flows = self._flowset()   # path changes take effect next window
         return result, reports
 

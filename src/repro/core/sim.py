@@ -118,14 +118,19 @@ def gen_arrivals(flows: FlowSet, cfg: SimConfig, *, seed: int = 0,
 
 def stack_arrivals(arrs: list[tuple[np.ndarray, np.ndarray]]
                    ) -> tuple[np.ndarray, np.ndarray]:
-    """Pad a list of (times, sizes) traces to a common length and stack to
-    [B, N, M] for ``simulate_batch``."""
+    """Pad a list of (times, sizes) traces to common flow-count and trace
+    length and stack to [B, N_max, M] for ``simulate_batch``.
+
+    Ragged flow counts pad with empty lanes (arrival time INF, size 0):
+    a padded lane never receives a message, so the engine's ``fl_mask``
+    keeps it inert."""
+    N = max(t.shape[0] for t, _ in arrs)
     M = max(t.shape[1] for t, _ in arrs)
-    times = np.full((len(arrs), arrs[0][0].shape[0], M), INF_I32, np.int32)
+    times = np.full((len(arrs), N, M), INF_I32, np.int32)
     sizes = np.zeros_like(times)
     for b, (t, s) in enumerate(arrs):
-        times[b, :, :t.shape[1]] = t
-        sizes[b, :, :s.shape[1]] = s
+        times[b, :t.shape[0], :t.shape[1]] = t
+        sizes[b, :s.shape[0], :s.shape[1]] = s
     return times, sizes
 
 
@@ -288,25 +293,45 @@ def simulate(flows: FlowSet, accels: AccelTable, link: LinkSpec,
     return result
 
 
-def simulate_batch(flows: FlowSet, accels, link, cfg: SimConfig,
+#: per-flow counter keys: ragged batch elements are sliced back to their
+#: unpadded flow count before result collection
+_PER_FLOW_KEYS = ("c_adm_msgs", "c_adm_b_lo", "c_adm_b_hi", "c_done_msgs",
+                  "c_done_b_lo", "c_done_b_hi", "c_drops", "c_lat_sum")
+
+
+def simulate_batch(flows, accels, link, cfg,
                    tb_states, arr_t: np.ndarray, arr_sz: np.ndarray,
                    stall_mask: np.ndarray | None = None,
                    *, t0_ticks: int = 0) -> list[SimResult]:
     """Run B independent simulations in one compiled ``jax.vmap`` call.
 
     * ``tb_states``: sequence of B TBStates (per-element shaping registers);
-    * ``arr_t`` / ``arr_sz``: [B, N, M] stacked traces (``stack_arrivals``);
+    * ``arr_t`` / ``arr_sz``: [B, N_max, M] stacked traces
+      (``stack_arrivals`` — it pads ragged flow counts);
+    * ``flows``: one shared FlowSet, or a sequence of B FlowSets which may
+      have *different flow counts* (padded + flow-masked in the engine);
+    * ``cfg``: one shared SimConfig, or a sequence of B that differ only in
+      the traced system fields (shaping mode, arbiter, software-delay
+      model) — heterogeneous baseline systems batch into one engine call;
     * ``accels`` / ``link``: one shared value, or sequences of B for
       per-element accelerator tables / link specs;
     * ``stall_mask``: shared [T] mask or per-element [B, T].
 
-    Returns one SimResult per batch element, each identical to what a serial
-    ``simulate()`` call with the same inputs produces."""
+    Returns one SimResult per batch element, each — counters included —
+    bitwise-identical to what a serial ``simulate()`` call with the same
+    (unpadded) inputs produces."""
     raw = engine.run_window_batch(flows, accels, link, cfg, tb_states,
                                   arr_t, arr_sz, stall_mask,
                                   t0_ticks=t0_ticks)
     host = jax.device_get({k: raw[k] for k in _RESULT_KEYS})
     B = host["comp_n"].shape[0]
-    return [_collect_result({k: v[b] for k, v in host.items()}, cfg,
-                            t0_ticks)
-            for b in range(B)]
+    flows_l = flows if isinstance(flows, (list, tuple)) else [flows] * B
+    cfg_l = cfg if isinstance(cfg, (list, tuple)) else [cfg] * B
+    out = []
+    for b in range(B):
+        el = {k: v[b] for k, v in host.items()}
+        n_b = flows_l[b].n
+        for k in _PER_FLOW_KEYS:
+            el[k] = el[k][:n_b]
+        out.append(_collect_result(el, cfg_l[b], t0_ticks))
+    return out

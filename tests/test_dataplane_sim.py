@@ -1,5 +1,6 @@
 """Integration + property tests for the cycle-accurate dataplane."""
 import dataclasses
+import hashlib
 
 import numpy as np
 import pytest
@@ -102,6 +103,49 @@ def test_property_shaping_accuracy(slo, msg):
     res, flows = _sim_two(slos=(slo,), n_ticks=40_000, msg=msg)
     got = res.mean_ingress_gbps(0, flows)
     assert abs(got - slo) / slo < 0.06, (slo, msg, got)
+
+
+def _trace_digest(flows, cfg, seed, ref):
+    t, s = gen_arrivals(flows, cfg, seed=seed, load_ref_gbps=ref)
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(t.astype("<i4")).tobytes())
+    h.update(np.ascontiguousarray(s.astype("<i4")).tobytes())
+    return t.shape, h.hexdigest()
+
+
+def test_gen_arrivals_same_seed_digests_pinned():
+    """Same-seed traces are pinned byte-for-byte.
+
+    PR 1's vectorized RNG already changed the draw order of same-seed
+    traces once; these digests make any future vectorization that would
+    silently reshuffle traces (and thereby every downstream 'same-seed'
+    comparison) an explicit, visible decision."""
+    specs = [
+        FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(1024, load=0.4, process="cbr"),
+                 SLO.gbps(10)),
+        FlowSpec(1, 1, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(512, load=0.3, process="poisson"),
+                 SLO.gbps(10)),
+        FlowSpec(2, 2, Path.INLINE_NIC_RX, 0,
+                 TrafficPattern(1500, load=0.5, process="onoff",
+                                burst_len=16, duty=0.25), SLO.gbps(10)),
+        FlowSpec(3, 3, Path.FUNCTION_CALL, 0,
+                 TrafficPattern(64, load=0.2, process="poisson",
+                                msg_bytes2=4096, p2=0.1), SLO.gbps(10)),
+    ]
+    flows = FlowSet.build(specs)
+    cfg = SimConfig(n_ticks=20_000)
+    ref = {i: 32.0 for i in range(4)}
+    assert _trace_digest(flows, cfg, 0, ref) == (
+        (4, 8017),
+        "6995db131b1979ad07c8b260581ae6f05cd8bfb15dd09cb1d2c4c858607d888f")
+    assert _trace_digest(flows, cfg, 7, ref) == (
+        (4, 7998),
+        "5358b52f722082e07ecdfb6fe5b646702b6cb66139dfcd27dd237de11a6dbe84")
+    assert _trace_digest(FlowSet.build([specs[1]]), cfg, 3, {0: 55.0}) == (
+        (1, 2578),
+        "f862ebb2590520bc81a7f119a3b3dba8edc7171e70755373f7bf8966a4d40cdd")
 
 
 def test_windowed_reconfiguration_carries_state():

@@ -2,10 +2,10 @@
 import numpy as np
 import pytest
 
-from repro.core import policies, token_bucket as tb
+from repro.core import engine, policies, token_bucket as tb
 from repro.core.accelerator import CATALOG
 from repro.core.flow import SLO, FlowSpec, Path, SLOKind, TrafficPattern
-from repro.core.profiler import ProfileTable, context_key
+from repro.core.profiler import CapacityEntry, ProfileTable, context_key
 from repro.core.runtime import ArcusRuntime
 from repro.core.shaper import reshape_decision
 
@@ -65,6 +65,78 @@ def test_slo_tag_friendly_vs_violating():
     half = e.capacity_gbps / 2
     assert e.slo_tag([0.9 * half, 0.9 * half])
     assert not e.slo_tag([1.2 * half, 1.2 * half])
+
+
+def test_slo_tag_rejects_oversized_per_flow_slo():
+    """An SLO exceeding what contention lets ONE flow reach must tag
+    SLO-Violating even when the aggregate fits the profiled capacity
+    (regression: only the total used to be checked)."""
+    # heterogeneous context in canonical order: the 64B flow first
+    # (bucket 6), then the 1500B flow (bucket 10-11)
+    e = CapacityEntry(capacity_gbps=27.0, per_flow_gbps=[2.0, 25.0],
+                      fairness=0.6)
+    # oversized SLO on the small-message flow: ceiling = 2 flows x 2 Gbps
+    assert not e.slo_tag([10.0, 5.0])
+    # same totals, but the big SLO rides on the big-message flow: friendly
+    assert e.slo_tag([3.0, 12.0])
+    # aggregate-style query (SLO count != profiled flow count) is bounded
+    # by the best single-flow ceiling: here 2 flows x 3 Gbps
+    e2 = CapacityEntry(capacity_gbps=27.0, per_flow_gbps=[2.0, 3.0],
+                       fairness=0.9)
+    assert e2.slo_tag([5.0])
+    assert not e2.slo_tag([10.0])
+
+
+def test_profile_contexts_batch_matches_serial():
+    """profile_contexts pads heterogeneous contexts (ragged flow counts,
+    mixed accelerators) into ONE compiled engine call and produces entries
+    bitwise-identical to serial profile_context runs."""
+    ctxs = [
+        (CATALOG["ipsec32"], [(Path.FUNCTION_CALL, 64, 0.9)]),
+        (CATALOG["ipsec32"], [(Path.FUNCTION_CALL, 1500, 0.9)] * 2),
+        (CATALOG["synthetic50"], [(Path.FUNCTION_CALL, 512, 0.9)] * 3),
+        (CATALOG["aes256"], [(Path.FUNCTION_CALL, 1024, 0.9),
+                             (Path.FUNCTION_CALL, 64, 0.9)]),
+    ]
+    serial = ProfileTable(n_ticks=8_000)
+    s_entries = [serial.profile_context(a, f) for a, f in ctxs]
+    batched = ProfileTable(n_ticks=8_000)
+    engine.cache_clear()
+    b_entries = batched.profile_contexts(ctxs)
+    assert engine.cache_info() == {"entries": 1, "traces": 1}
+    for s, b in zip(s_entries, b_entries):
+        assert s.capacity_gbps == b.capacity_gbps, s.ctx
+        assert s.per_flow_gbps == b.per_flow_gbps, s.ctx
+    # cache-hit path: re-querying (plus a permuted duplicate) simulates
+    # nothing and returns the same entries
+    before = engine.cache_info()
+    again = batched.profile_contexts(ctxs + [
+        (CATALOG["aes256"], [(Path.FUNCTION_CALL, 64, 0.9),
+                             (Path.FUNCTION_CALL, 1024, 0.9)])])
+    assert engine.cache_info() == before
+    assert again[4] is b_entries[3]     # permuted context, same entry
+
+
+def test_run_managed_partial_trailing_window():
+    """total_ticks % window_ticks != 0 must run the remainder as a final
+    short window, not silently drop it (regression)."""
+    rt = ArcusRuntime([CATALOG["synthetic50"]])
+    rt.register(_spec(0, 10.0, msg=1024))
+    res_full, rep_full = rt.run_managed(total_ticks=40_000,
+                                        window_ticks=15_000,
+                                        load_ref_gbps={0: 32.0})
+    # 2 full windows + one 10_000-tick remainder window
+    assert len(rep_full) == 3
+    window_s = 15_000 * 8 / rt.clock_hz
+    assert rep_full[-1].t_end_s == pytest.approx(40_000 * 8 / rt.clock_hz)
+    assert rep_full[1].t_end_s == pytest.approx(2 * window_s)
+    # the tail was actually simulated: more completions than at 30k ticks
+    rt2 = ArcusRuntime([CATALOG["synthetic50"]])
+    rt2.register(_spec(0, 10.0, msg=1024))
+    res_trunc, _ = rt2.run_managed(total_ticks=30_000, window_ticks=15_000,
+                                   load_ref_gbps={0: 32.0})
+    assert (res_full.counters["c_done_msgs"][0]
+            > res_trunc.counters["c_done_msgs"][0])
 
 
 def test_reshape_decision_heterogeneity():
