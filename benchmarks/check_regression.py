@@ -1,0 +1,87 @@
+"""CI bench-regression gate.
+
+Compares a fresh ``sim_perf`` smoke run (written by ``benchmarks.run
+--quick --only sim_perf`` with ``REPRO_BENCH_RESULTS`` pointed at a scratch
+directory) against the committed baseline in
+``benchmarks/results/sim_perf.json`` and emits ``BENCH_pr.json`` — the
+perf trajectory artifact CI uploads for every PR:
+
+  * cached-rerun us/tick (the steady-state engine speed) + ratio vs the
+    committed baseline — the job FAILS if the PR is > ``--max-slowdown``
+    (default 2x) slower.  The baseline is machine-dependent; the 2x
+    allowance absorbs runner-vs-dev-box spread, and the
+    machine-*relative* ratios below (batch-vs-serial, vectorized-stage
+    speedups) are the signals to read when the absolute gate is noisy —
+    re-baseline ``benchmarks/results/sim_perf.json`` if runners change
+    class;
+  * batch-vs-serial and profiler-sweep speedups;
+  * engine compile-cache entry/trace counts (a growing count means a PR
+    broke a cache key and reintroduced per-window recompiles).
+
+Usage:
+    python -m benchmarks.check_regression \
+        --pr bench_out/sim_perf.json \
+        --baseline benchmarks/results/sim_perf.json \
+        --out BENCH_pr.json [--max-slowdown 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def summarize(pr: dict, baseline: dict, max_slowdown: float) -> dict:
+    pr_us = pr["cached_rerun"]["us_per_call"]
+    base_us = baseline["cached_rerun"]["us_per_call"]
+    ratio = pr_us / max(base_us, 1e-12)
+    return {
+        "cached_rerun_us_per_tick": pr_us,
+        "baseline_us_per_tick": base_us,
+        "slowdown_vs_baseline_x": ratio,
+        "max_slowdown_x": max_slowdown,
+        "ok": ratio <= max_slowdown,
+        "batch8_speedup_vs_serial_x":
+            pr["batch8"]["speedup_vs_serial_x"],
+        "profile_batch8_speedup_vs_serial_x":
+            pr["profile_batch8"]["speedup_vs_serial_x"],
+        "grant_vec_speedup_x": pr["grant_vec"]["speedup_x"],
+        "stage_vec_speedup_x": pr["stage_vec"]["speedup_x"],
+        "engine_cache": {
+            "cached_rerun_traces": pr["cached_rerun"]["traces"],
+            "managed_10w_entries": pr["managed_10w"]["entries"],
+            "managed_10w_traces": pr["managed_10w"]["traces"],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pr", required=True,
+                    help="sim_perf.json from this PR's smoke run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed benchmarks/results/sim_perf.json")
+    ap.add_argument("--out", default="BENCH_pr.json")
+    ap.add_argument("--max-slowdown", type=float, default=2.0)
+    args = ap.parse_args()
+
+    with open(args.pr) as f:
+        pr = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    out = summarize(pr, baseline, args.max_slowdown)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+    if not out["ok"]:
+        print(f"FAIL: cached rerun {out['cached_rerun_us_per_tick']:.1f} "
+              f"us/tick is {out['slowdown_vs_baseline_x']:.2f}x the "
+              f"committed baseline ({out['baseline_us_per_tick']:.1f}) — "
+              f"limit {args.max_slowdown}x", file=sys.stderr)
+        sys.exit(1)
+    print(f"OK: cached rerun within {args.max_slowdown}x of baseline "
+          f"({out['slowdown_vs_baseline_x']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

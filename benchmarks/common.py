@@ -14,7 +14,11 @@ import os
 import time
 from typing import Any
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+#: JSON artifacts land here; CI points REPRO_BENCH_RESULTS somewhere else so
+#: a smoke run never overwrites the committed baselines it is compared to
+RESULTS_DIR = os.environ.get(
+    "REPRO_BENCH_RESULTS",
+    os.path.join(os.path.dirname(__file__), "results"))
 
 
 @dataclasses.dataclass

@@ -21,11 +21,10 @@ import numpy as np
 
 from benchmarks.common import Row, Timer, save_json, us_per_tick
 from repro.core import baselines, token_bucket as tb
-from repro.core.accelerator import (AcceleratorSpec, AccelTable, CATALOG,
-                                    CURVE_LINEAR, R_FIXED)
+from repro.core.accelerator import AccelTable, CATALOG, R_FIXED
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
-from repro.core.sim import SimConfig, gen_arrivals, simulate
+from repro.core.sim import gen_arrivals, simulate
 
 CASES_T = {
     "pattern1": ((256, 0.1), (64, None)),

@@ -16,8 +16,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, Timer, save_json, us_per_tick
-from repro.core import baselines, token_bucket as tb
-from repro.core.accelerator import CATALOG, AccelTable, size_grid
+from repro.core import token_bucket as tb
+from repro.core.accelerator import CATALOG, AccelTable
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
 from repro.core.profiler import ProfileTable

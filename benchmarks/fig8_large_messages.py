@@ -19,7 +19,7 @@ from repro.core.accelerator import CATALOG, AccelTable
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
 from repro.core.shaper import reshape_decision, reshape_trace
-from repro.core.sim import SimConfig, gen_arrivals, simulate
+from repro.core.sim import gen_arrivals, simulate
 
 MSGS = (1024, 4096, 16384, 65536, 262144, 524288)
 ACCEL = CATALOG["aes256"]  # 40 Gbps, R=1

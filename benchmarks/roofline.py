@@ -27,10 +27,10 @@ import json
 import os
 
 from benchmarks.common import RESULTS_DIR, Row, save_json
-from repro.configs.registry import ARCH_IDS, SHAPES, get_config
+from repro.configs.registry import SHAPES, get_config
 from repro.models import transformer as T
-from repro.serving.costmodel import (TPU_V5E, flops_per_token,
-                                     kv_bytes_per_token, param_bytes)
+from repro.serving.costmodel import (TPU_V5E, kv_bytes_per_token,
+                                     param_bytes)
 
 DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
 ICI_BW = TPU_V5E["ici"]

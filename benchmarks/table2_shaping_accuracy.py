@@ -9,7 +9,6 @@ achieved rate within ~1% of the target (vs >10 us software timers).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Row, Timer, save_json, us_per_tick
 from repro.core import token_bucket as tb

@@ -21,7 +21,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import token_bucket as tb
-from repro.core.interconnect import ARB_PRIORITY, ARB_RR, ARB_WFQ, ARB_WRR
+from repro.core.interconnect import ARB_PRIORITY, ARB_RR, ARB_WRR
 from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SHAPING_SW, SimConfig,
                             gen_stall_mask, simulate_batch, stack_arrivals)
 

@@ -36,6 +36,20 @@ with ``fl_mask``: padded lanes never receive arrivals, are never eligible
 for grants, and the arbiter keys are computed modulo the *active* flow
 count, so every counter of an active lane is bitwise-identical to a serial
 unpadded run.
+
+Accelerator tables batch the same way: elements with *different accelerator
+counts* are padded to a shared ``n_accels_max`` (``pad_accel_table``) with a
+per-accelerator validity mask ``ac_mask`` threaded through the pipeline —
+padded accelerators have every lane disabled, are never routed to (flow
+tables only reference active accelerators), never start service, and the
+software-shaping host-delay LCG advances once per *active* service
+iteration only, so a padded element stays bitwise-identical to its serial
+unpadded run in every shaping mode.
+
+``run_window_batch`` also accepts a resumed ``carry`` (with fresh per-element
+TBState registers applied, exactly like ``run_window``): this is what lets
+``ArcusRuntime.run_managed_batch`` drive B client servers' control loops as
+one compiled program, re-provisioning token buckets between windows.
 """
 from __future__ import annotations
 
@@ -48,7 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import token_bucket as tb
-from repro.core.accelerator import AccelTable, interp_grid
+from repro.core.accelerator import GRID_N, AccelTable, interp_grid
 from repro.core.flow import FlowSet, Path
 from repro.core.interconnect import (ARB_PRIORITY, ARB_RR, ARB_WFQ, ARB_WRR,
                                      LinkSpec)
@@ -233,6 +247,48 @@ def pad_tb_state(state: tb.TBState, n_max: int) -> tb.TBState:
     )
 
 
+def _accel_mask(tab: AccelTable) -> np.ndarray:
+    """Per-accelerator validity mask (active = has at least one lane).
+
+    Active accelerators must occupy a prefix of the table: the service
+    stage's closed-form LCG draw indexes iterations as ``k * n_active + a``,
+    which equals the sequential walk only when every active row precedes
+    every padded row (``pad_accel_table`` always appends padding; a
+    hand-built table with a mid-table ``parallelism=0`` row would silently
+    diverge, so reject it here)."""
+    m = np.asarray(tab.parallelism) > 0
+    if np.any(~m[:-1] & m[1:]):
+        raise ValueError(
+            "active accelerators (parallelism > 0) must form a prefix of "
+            f"the AccelTable (got parallelism={list(tab.parallelism)})")
+    return m
+
+
+def pad_accel_table(tab: AccelTable, a_max: int) -> AccelTable:
+    """Pad an accelerator table to ``a_max`` rows (ragged accel batching).
+
+    Padded accelerators carry benign service/egress curves (never read:
+    no flow routes to them) and ``parallelism=0``, which disables every
+    lane at ``init_carry`` time — they can never start service."""
+    if tab.n == a_max:
+        return tab
+    if tab.n > a_max:
+        raise ValueError(f"AccelTable has {tab.n} accels > a_max={a_max}")
+    pad = a_max - tab.n
+    return AccelTable(
+        n=a_max,
+        service_cycles=np.concatenate(
+            [tab.service_cycles,
+             np.ones((pad, GRID_N), np.float32)]).astype(np.float32),
+        egress_bytes=np.concatenate(
+            [tab.egress_bytes,
+             np.ones((pad, GRID_N), np.float32)]).astype(np.float32),
+        parallelism=np.concatenate(
+            [tab.parallelism, np.zeros(pad, np.int32)]).astype(np.int32),
+        names=list(tab.names) + ["__pad__"] * pad,
+    )
+
+
 def _flow_args(flows: FlowSet, n_max: int) -> dict[str, np.ndarray]:
     """Per-flow routing/weight tables padded to ``n_max`` plus the validity
     mask.  Padded lanes route to accel 0 / direction 0 (any in-range value:
@@ -297,6 +353,9 @@ def _pack_args(flows: FlowSet, accels: AccelTable, link: LinkSpec,
         t0=jnp.asarray(t0_ticks, jnp.int32),
         svc_tab=jnp.asarray(accels.service_cycles, jnp.float32),
         eg_tab=jnp.asarray(accels.egress_bytes, jnp.float32),
+        # per-accelerator validity (ragged accel batching): a padded row is
+        # never routed to, never serves, and never draws host-delay jitter
+        ac_mask=jnp.asarray(_accel_mask(accels), bool),
         bpc=jnp.asarray([h2d_bpc, d2h_bpc], jnp.float32),
         ovh=jnp.asarray(link.msg_overhead_bytes, jnp.float32),
         credits=jnp.asarray(link.credits, jnp.int32),
@@ -367,6 +426,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
     fl_eg_dir, fl_eg_full = args["fl_eg_dir"], args["fl_eg_full"]
     fl_prio, fl_w, fl_mask = args["fl_prio"], args["fl_w"], args["fl_mask"]
     svc_tab, eg_tab = args["svc_tab"], args["eg_tab"]
+    ac_mask = args["ac_mask"]
     bpc, ovh, credits = args["bpc"], args["ovh"], args["credits"]
     mode, arb = args["mode"], args["arb"]
     N = fl_accel.shape[0]
@@ -378,6 +438,9 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
     # active (unpadded) lanes; arbiter keys cycle modulo this count so a
     # padded batch element is bitwise-identical to its unpadded serial run
     n_act = jnp.maximum(jnp.sum(fl_mask.astype(jnp.int32)), 1)
+    # active accelerators (padded accel rows fill the trailing positions);
+    # the service stage and its host-delay LCG skip padded rows entirely
+    ac_n = jnp.maximum(jnp.sum(ac_mask.astype(jnp.int32)), 1)
 
     now = t * cfg.tick_cycles
     now_end = now + cfg.tick_cycles
@@ -601,12 +664,13 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
     # (iteration i serves accel i % A on pass i // A)
     def srv_body(i, c):
         a = i % A
+        act = ac_mask[a]      # padded accel rows (ragged batching) are inert
         lanes_a = c["lanes"][a]
         lane = jnp.argmin(lanes_a).astype(jnp.int32)
         # a lane that frees during this tick may chain back-to-back
         # (no tick-quantization idle gap between messages)
         free = lanes_a[lane] < jnp.float32(now_end)
-        ok = free & (c["aq_cnt"][a] > 0)
+        ok = free & (c["aq_cnt"][a] > 0) & act
         h = c["aq_head"][a]
         sz = c["aq_sz"][a, h]
         fl = c["aq_fl"][a, h]
@@ -622,10 +686,12 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         c["aq_cnt"] = c["aq_cnt"].at[a].add(-ok.astype(jnp.int32))
         c["aq_bytes"] = c["aq_bytes"].at[a].add(jnp.where(ok, -sz, 0))
         # host-processing delay (software-mediated shaping only; the LCG
-        # advances once per iteration whenever shaping is software, busy
-        # or idle, exactly like the closed-form batch draw below)
+        # advances once per *active-accelerator* iteration whenever shaping
+        # is software, busy or idle, exactly like the closed-form batch
+        # draw below — padded rows draw nothing, so a ragged element's
+        # jitter stream matches its unpadded serial run)
         r = c["rng"] * _LCG_A + _LCG_C
-        c["rng"] = jnp.where(sw, r, c["rng"])
+        c["rng"] = jnp.where(sw & act, r, c["rng"])
         u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
         hostd = jnp.where(sw, args["sw_delay"] + (u ** 4) * args["sw_jit"],
                           jnp.float32(0.0))
@@ -674,7 +740,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         si = jnp.argsort(carry["lanes"], axis=1)[:, kl].astype(jnp.int32)
         free = (sl < jnp.float32(now_end)) & (kk < cfg.lmax)[None, :]
         have = kk[None, :] < carry["aq_cnt"][:, None]
-        s_ok = free & have                                  # prefix rows
+        s_ok = free & have & ac_mask[:, None]               # prefix rows
         aslot = (carry["aq_head"][:, None] + kk[None, :]) % cfg.aq_len
         s_sz = carry["aq_sz"][ia[:, None], aslot]
         s_fl = carry["aq_fl"][ia[:, None], aslot]
@@ -692,13 +758,17 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
             c["aq_head"] = (c["aq_head"] + n_start) % cfg.aq_len
             c["aq_cnt"] = c["aq_cnt"] - n_start
             c["aq_bytes"] = c["aq_bytes"] - jnp.where(s_ok, s_sz, 0).sum(1)
-            # host-processing delay: closed-form LCG draw for iteration
-            # i = k*A + a, bitwise-equal to the sequential per-step update
+            # host-processing delay: closed-form LCG draw for *active*
+            # iteration i = k*ac_n + a (padded accel rows draw nothing),
+            # bitwise-equal to the sequential per-step update of a run
+            # with only the active accelerators
             powv, sumv = _lcg_tables(A * Ks)
-            it = kk[None, :] * A + ia[:, None]               # [A, Ks]
+            it = jnp.minimum(kk[None, :] * ac_n + ia[:, None],
+                             A * Ks - 1)                     # [A, Ks]
             r = c["rng"] * jnp.asarray(powv)[it] + jnp.asarray(sumv)[it]
-            c["rng"] = jnp.where(sw, c["rng"] * powv[-1] + sumv[-1],
-                                 c["rng"])
+            adv = jnp.maximum(ac_n * Ks - 1, 0)
+            c["rng"] = jnp.where(sw, c["rng"] * jnp.asarray(powv)[adv]
+                                 + jnp.asarray(sumv)[adv], c["rng"])
             u = (jnp.abs(r) % 65536).astype(jnp.float32) / 65536.0
             hostd = jnp.where(sw, args["sw_delay"]
                               + (u ** 4) * args["sw_jit"], jnp.float32(0.0))
@@ -928,7 +998,7 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
                      cfg: SimConfig | Sequence[SimConfig],
                      tb_states: Sequence[tb.TBState],
                      arr_t, arr_sz, stall_mask=None, *,
-                     t0_ticks: int = 0) -> dict:
+                     t0_ticks: int = 0, carry: dict | None = None) -> dict:
     """Run B independent windows in one compiled ``jax.vmap`` call.
 
     Batched per element: arrival trace, TBState registers, and (when
@@ -936,12 +1006,22 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     specs and ``[B, T]`` stall masks.  Flow sets may have *different flow
     counts*: they are padded to the largest count and masked (``fl_mask``),
     with counters of active lanes bitwise-equal to unpadded serial runs.
-    SimConfigs may differ only in the traced mode fields
-    (``TRACED_CFG_FIELDS``: shaping, arbiter, software-delay model) — the
-    structural fields form the single compile signature.  Returns the raw
-    batched carry."""
-    arr_t = np.asarray(arr_t)
-    arr_sz = np.asarray(arr_sz)
+    Accelerator tables may likewise have *different accelerator counts*:
+    they are padded to the largest count (``pad_accel_table``) and masked
+    (``ac_mask``), with the same bitwise guarantee.  SimConfigs may differ
+    only in the traced mode fields (``TRACED_CFG_FIELDS``: shaping,
+    arbiter, software-delay model) — the structural fields form the single
+    compile signature.
+
+    Passing back the returned ``carry`` resumes all B dataplanes with fresh
+    per-element TBState registers applied (the fleet-scale analogue of
+    ``run_window``'s resumption: ``ArcusRuntime.run_managed_batch`` drives
+    its whole window loop through this).  The input carry is **donated** —
+    hand the returned one forward, never reuse the one passed in.  Returns
+    the raw batched carry."""
+    if not hasattr(arr_t, "ndim"):       # nested python lists
+        arr_t = np.asarray(arr_t)
+        arr_sz = np.asarray(arr_sz)
     if arr_t.ndim != 3:
         raise ValueError(
             f"arr_t must be [B, N, M] (got ndim={arr_t.ndim}) — "
@@ -966,8 +1046,8 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
             f"{TRACED_CFG_FIELDS}")
     for c in cfgs_l[1:]:
         _check_modes(c)    # element 0 is checked by _pack_args below
-    if any(a.n != accels_l[0].n for a in accels_l[1:]):
-        raise ValueError("all batch elements must share the accel count")
+    a_max = max(a.n for a in accels_l)
+    padded_l = [pad_accel_table(a, a_max) for a in accels_l]
 
     n_max = max(f.n for f in flows_l)
     if arr_t.shape[1] != n_max:
@@ -991,7 +1071,7 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     ph = np.zeros((n_max, 1), np.int32)
     flows0 = flows_l[0] if flows_l[0].n == n_max else flows_l[
         int(np.argmax([f.n for f in flows_l]))]
-    args = _pack_args(flows0, accels_l[0], links_l[0], cfg0,
+    args = _pack_args(flows0, padded_l[0], links_l[0], cfg0,
                       ph, ph, None, t0_ticks)
     axes = {k: None for k in args}
     args["arr_t"] = jnp.asarray(arr_t, jnp.int32)
@@ -1012,10 +1092,12 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
         axes["mode"] = axes["arb"] = axes["sw_delay"] = axes["sw_jit"] = 0
     if accel_batched:
         args["svc_tab"] = jnp.stack(
-            [jnp.asarray(a.service_cycles, jnp.float32) for a in accels_l])
+            [jnp.asarray(a.service_cycles, jnp.float32) for a in padded_l])
         args["eg_tab"] = jnp.stack(
-            [jnp.asarray(a.egress_bytes, jnp.float32) for a in accels_l])
-        axes["svc_tab"] = axes["eg_tab"] = 0
+            [jnp.asarray(a.egress_bytes, jnp.float32) for a in padded_l])
+        args["ac_mask"] = jnp.stack(
+            [jnp.asarray(_accel_mask(a), bool) for a in padded_l])
+        axes["svc_tab"] = axes["eg_tab"] = axes["ac_mask"] = 0
     if link_batched:
         args["bpc"] = jnp.asarray([l.bytes_per_cycle() for l in links_l],
                                   jnp.float32)
@@ -1028,10 +1110,18 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
             _window_stall(stall_np, cfg0, t0_ticks), bool)
         axes["stall"] = 0 if stall_batched else None
 
-    carries = [init_carry(flows_l[b], accels_l[b], cfg0,
-                          pad_tb_state(tb_states[b], n_max), n_flows=n_max)
-               for b in range(B)]
-    carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+    tb_padded = [pad_tb_state(tb_states[b], n_max) for b in range(B)]
+    if carry is None:
+        carries = [init_carry(flows_l[b], padded_l[b], cfg0, tb_padded[b],
+                              n_flows=n_max)
+                   for b in range(B)]
+        carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+    else:
+        # resumed fleet window: write only the per-element parameter
+        # "registers" (stacked [B, n_max] leaves), like run_window does
+        stacked_tb = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *tb_padded)
+        carry = reconfigure_carry(carry, stacked_tb)
 
     key = ("batch", _static_cfg(cfg0), B, _args_sig(args),
            tuple(sorted(axes.items())))

@@ -18,7 +18,11 @@ permuted caller context still lines up.  ``profile_contexts`` batches many
 heterogeneous contexts — different flow counts, different accelerators —
 into a single ragged ``simulate_batch`` call: one compiled engine executes
 the whole Capacity(t, X, N) sweep instead of one compile-bound serial run
-per context.
+per context.  ``profile_contexts_multi`` extends that across *multiple*
+ProfileTables (one per client server in a fleet): all cache-missing
+contexts of every table, grouped by profiling config, run as one batched
+engine call — this is what ``runtime.register_fleet`` drives each
+admission round through.
 """
 from __future__ import annotations
 
@@ -163,31 +167,8 @@ class ProfileTable:
         are bitwise-identical to what serial ``profile_context`` calls
         produce (the masked engine's counters match unpadded serial runs).
         """
-        keys = [context_key(a.name, f) for a, f in contexts]
-        todo: dict[str, tuple[AcceleratorSpec, list]] = {}
-        for (accel, flows), key in zip(contexts, keys):
-            if key not in self.entries and key not in todo:
-                todo[key] = (accel, flows)
-        if todo:
-            cfg = self._cfg()
-            fsets, atabs, tbss, arrs, ns = [], [], [], [], []
-            for accel, flows in todo.values():
-                specs = _context_specs(flows)
-                fset = FlowSet.build(specs)
-                ref = {i: accel.peak_gbps for i in range(len(specs))}
-                fsets.append(fset)
-                atabs.append(AccelTable.build([accel]))
-                tbss.append(baselines.make_tb_state(
-                    baselines.HOST_NO_TS,
-                    [tb.TBParams(1, 1, 1)] * len(specs)))
-                arrs.append(gen_arrivals(fset, cfg, seed=seed,
-                                         load_ref_gbps=ref))
-                ns.append(len(specs))
-            results = simulate_batch(fsets, atabs, self.link, cfg, tbss,
-                                     *stack_arrivals(arrs))
-            for key, res, n in zip(todo, results, ns):
-                self._entry_from_result(key, res, n)
-        return [self.entries[k] for k in keys]
+        return profile_contexts_multi([(self, a, f) for a, f in contexts],
+                                      seed=seed)
 
     def sweep(self, accel: AcceleratorSpec, *, paths=(Path.FUNCTION_CALL,),
               msg_sizes=(64, 512, 4096), loads=(0.9,),
@@ -227,3 +208,54 @@ class ProfileTable:
             for k, v in json.load(f).items():
                 t.entries[k] = CapacityEntry(**v)
         return t
+
+
+def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
+                                                AcceleratorSpec,
+                                                list[tuple[Path, int,
+                                                           float]]]],
+                           *, seed: int = 0) -> list[CapacityEntry]:
+    """Fleet-aware batched profiling across MULTIPLE ProfileTables.
+
+    ``jobs`` is a sequence of (table, accelerator, flows-context) triples —
+    typically one per client server in a fleet, each server holding its own
+    ProfileTable (possibly with its own LinkSpec).  All cache-missing
+    contexts, deduplicated per table, run as ONE ragged ``simulate_batch``
+    per profiling config (tables sharing ``n_ticks``/``tick_cycles`` share
+    the call; per-table links ride the batch's link axis).  Entries are
+    bitwise-identical to serial ``profile_context`` runs and are written
+    into each job's own table.  Returns entries aligned with ``jobs``."""
+    keys = [context_key(a.name, f) for _, a, f in jobs]
+    todo: dict[tuple[int, str], tuple["ProfileTable", str, AcceleratorSpec,
+                                      list]] = {}
+    for (table, accel, flows), key in zip(jobs, keys):
+        tk = (id(table), key)
+        if key not in table.entries and tk not in todo:
+            todo[tk] = (table, key, accel, flows)
+    groups: dict[tuple[int, int], list] = {}
+    for item in todo.values():
+        table = item[0]
+        groups.setdefault((table.n_ticks, table.tick_cycles),
+                          []).append(item)
+    for items in groups.values():
+        cfg = items[0][0]._cfg()
+        fsets, atabs, tbss, arrs, ns, links = [], [], [], [], [], []
+        for table, key, accel, flows in items:
+            specs = _context_specs(flows)
+            fset = FlowSet.build(specs)
+            ref = {i: accel.peak_gbps for i in range(len(specs))}
+            fsets.append(fset)
+            atabs.append(AccelTable.build([accel]))
+            tbss.append(baselines.make_tb_state(
+                baselines.HOST_NO_TS,
+                [tb.TBParams(1, 1, 1)] * len(specs)))
+            arrs.append(gen_arrivals(fset, cfg, seed=seed,
+                                     load_ref_gbps=ref))
+            ns.append(len(specs))
+            links.append(table.link)
+        link_arg = links[0] if all(ln is links[0] for ln in links) else links
+        results = simulate_batch(fsets, atabs, link_arg, cfg, tbss,
+                                 *stack_arrivals(arrs))
+        for (table, key, _a, _f), res, n in zip(items, results, ns):
+            table._entry_from_result(key, res, n)
+    return [t.entries[k] for (t, _, _), k in zip(jobs, keys)]

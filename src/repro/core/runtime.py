@@ -9,23 +9,37 @@ Runs on every client server; periodically:
 
 The dataplane is the jitted simulator (`repro.core.sim`); register writes
 are the carry's TBState parameter fields — the MMIO analogue.
+
+Fleet scale: ``run_managed_batch`` drives B client servers' managed
+dataplanes as ONE compiled program — per-server FlowSets (ragged flow
+counts), accelerator complements (ragged accel counts), SLO vectors and
+TBState registers stack along a fleet axis through
+``engine.run_window_batch``; between engine windows the Algorithm 1
+measurement/violation pass runs fleet-vectorized over ``[B, n_max]``
+counter arrays.  ``register_fleet`` batches each admission round's
+CapacityPlanning profiling the same way.  Counters and WindowReports are
+bitwise-equal to B serial ``run_managed`` calls.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine, sim
 from repro.core import token_bucket as tb
 from repro.core.accelerator import AccelTable, AcceleratorSpec
-from repro.core.flow import (PATH_EGRESS_DIR, PATH_INGRESS_DIR, SLO, FlowSet,
-                             FlowSpec, Path, SLOKind)
+from repro.core.flow import (PATH_INGRESS_DIR, FlowSet, FlowSpec, Path,
+                             SLOKind)
 from repro.core.interconnect import ARB_RR, LinkSpec
-from repro.core.profiler import ProfileTable, canonical_order
+from repro.core.profiler import (ProfileTable, canonical_order,
+                                 profile_contexts_multi)
 from repro.core.shaper import reshape_decision
-from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals, simulate
+from repro.core.sim import (SHAPING_HW, SimConfig, gen_arrivals, simulate,
+                            stack_arrivals)
 
 
 @dataclasses.dataclass
@@ -80,15 +94,25 @@ class ArcusRuntime:
                                               params=decision.params)
         return True
 
+    def _admission_context(self, spec: FlowSpec
+                           ) -> tuple[AcceleratorSpec, list[FlowSpec],
+                                      list[tuple[Path, int, float]]]:
+        """The would-be CapacityPlanning context if ``spec`` registered:
+        (accelerator, peer specs incl. the candidate, profiler context).
+        Single source of truth — ``register_fleet`` pre-profiles exactly
+        this context, so its cache warming always matches admission."""
+        accel = self.accel_specs[spec.accel_id]
+        peers = [s.spec for s in self.table.values()
+                 if s.spec.accel_id == spec.accel_id] + [spec]
+        ctx = [(s.path, s.pattern.msg_bytes, s.pattern.load) for s in peers]
+        return accel, peers, ctx
+
     def _admission_control(self, spec: FlowSpec) -> bool:
         """CapacityPlanning(CHECK): the profiled capacity of the would-be
         context must cover every flow's SLO — in aggregate, and per flow
         (a small-message flow cannot be promised more than contention lets
         one flow reach, see ``CapacityEntry.slo_tag``)."""
-        accel = self.accel_specs[spec.accel_id]
-        peers = [s.spec for s in self.table.values()
-                 if s.spec.accel_id == spec.accel_id] + [spec]
-        ctx = [(s.path, s.pattern.msg_bytes, s.pattern.load) for s in peers]
+        accel, peers, ctx = self._admission_context(spec)
         entry = self.profile.capacity(accel, ctx)
         # per-flow SLO vector in the entry's canonical context order
         return entry.slo_tag([self._slo_gbps(peers[i])
@@ -166,27 +190,35 @@ class ArcusRuntime:
         prev = self._prev_counters or {k: np.zeros_like(v)
                                        for k, v in cur.items()}
         self._prev_counters = cur
+        kind = np.array([int(self.table[fid].spec.slo.kind)
+                         for fid in sorted(self.table)], np.int32)
+        measured_row = _measured_rates(cur, prev, kind, window_s)
+        return self._window_pass(cur, prev, window_s, result.seconds,
+                                 measured_row)
+
+    def _window_pass(self, cur, prev, window_s: float, t_end_s: float,
+                     measured_row: np.ndarray) -> WindowReport:
+        """Per-flow half of the Algorithm 1 window pass: violation check +
+        ReAdjustPattern + report assembly.  The single body shared by the
+        serial and fleet paths — the fleet's bitwise-equality contract
+        rides on there being exactly one copy of these decisions."""
         measured, violated, reconfigured, path_changes = {}, [], [], []
         for i, fid in enumerate(sorted(self.table)):
             st = self.table[fid]
-            if st.spec.slo.kind == SLOKind.IOPS:
-                meas = (cur["c_done_msgs"][i] - prev["c_done_msgs"][i]) / window_s
-            else:
-                meas = ((cur["c_done_bytes"][i] - prev["c_done_bytes"][i])
-                        * 8 / window_s / 1e9)
-            st.measured = float(meas)
+            st.measured = float(measured_row[i])
             measured[fid] = st.measured
             if not self._slo_ok(st):
                 st.violations += 1
                 violated.append(fid)
+                old_path = int(st.spec.path)
                 changed = self._re_adjust_pattern(st, cur, prev, window_s)
                 if changed:
                     reconfigured.append(fid)
                     if changed == "path":
                         path_changes.append(
-                            (fid, int(st.spec.path), int(st.spec.path)))
-        return WindowReport(result.seconds, measured, violated,
-                            reconfigured, path_changes)
+                            (fid, old_path, int(st.spec.path)))
+        return WindowReport(t_end_s, measured, violated, reconfigured,
+                            path_changes)
 
     def _slo_ok(self, st: FlowStatus) -> bool:
         """SLOViolationChecker (lines 11-13)."""
@@ -246,3 +278,199 @@ class ArcusRuntime:
             d = PATH_INGRESS_DIR[st.spec.path]
             by_dir[d] += b
         return np.array([by_dir[0] / h2d_bps, by_dir[1] / d2h_bps, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale managed execution: B client servers, one compiled program
+# ---------------------------------------------------------------------------
+
+#: per-window counter reads (the fleet MMIO poll) — the completion rings
+#: stay on device until the final window, so the control plane's per-window
+#: device_get is a few [B, n_max] arrays, not the multi-megabyte history
+_FLEET_POLL_KEYS = ("c_adm_msgs", "c_adm_b_lo", "c_adm_b_hi", "c_done_msgs",
+                    "c_done_b_lo", "c_done_b_hi", "c_drops", "c_lat_sum")
+
+
+def _fleet_counters(host: dict) -> dict[str, np.ndarray]:
+    """[B, n_max] counter arrays in the exact form serial ``SimResult``
+    counters take (hi/lo byte counters recombined into int64)."""
+    cur = {k: np.asarray(host[k])
+           for k in ("c_adm_msgs", "c_done_msgs", "c_drops", "c_lat_sum")}
+    cur["c_adm_bytes"] = sim.combine_byte_counters(host["c_adm_b_hi"],
+                                                   host["c_adm_b_lo"])
+    cur["c_done_bytes"] = sim.combine_byte_counters(host["c_done_b_hi"],
+                                                    host["c_done_b_lo"])
+    return cur
+
+
+def _measured_rates(cur: dict, prev: dict, kind: np.ndarray,
+                    window_s: float) -> np.ndarray:
+    """SLOViolationChecker measurement (Algorithm 1 lines 11-13),
+    vectorized over trailing flow axes: per-flow achieved rate in the
+    flow's own SLO unit (IOPS or Gbps of ingress payload).  Elementwise
+    float64 — one server's row is bitwise-identical whether computed
+    serially ([n]) or as a fleet slab ([B, n_max])."""
+    meas_iops = (cur["c_done_msgs"] - prev["c_done_msgs"]) / window_s
+    meas_gbps = ((cur["c_done_bytes"] - prev["c_done_bytes"])
+                 * 8 / window_s / 1e9)
+    return np.where(kind == int(SLOKind.IOPS), meas_iops, meas_gbps)
+
+
+def _fleet_algorithm1(runtimes: Sequence[ArcusRuntime],
+                      flowsets: Sequence[FlowSet], host: dict,
+                      prev: dict | None, cfg: SimConfig, t0_ticks: int,
+                      reports: list[list[WindowReport]]) -> dict:
+    """One fleet-wide Algorithm 1 pass between engine windows.
+
+    Measurement runs vectorized over the whole fleet (one ``[B, n_max]``
+    ``_measured_rates`` slab); the per-flow violation/ReAdjustPattern body
+    is the exact serial code path (``ArcusRuntime._window_pass``), so
+    fleet decisions are the serial decisions by construction."""
+    clock_hz = runtimes[0].clock_hz
+    cur = _fleet_counters(host)
+    if prev is None:
+        prev = {k: np.zeros_like(v) for k, v in cur.items()}
+    window_s = cfg.n_ticks * cfg.tick_cycles / clock_hz
+    # report timestamps use the SimConfig clock, exactly like the serial
+    # path's ``result.seconds`` (the runtime clock only scales window_s)
+    t_end_s = (t0_ticks + cfg.n_ticks) * cfg.tick_cycles / cfg.clock_hz
+    B, n_max = cur["c_done_msgs"].shape
+    kind = np.full((B, n_max), -1, np.int32)
+    for b, rt in enumerate(runtimes):
+        for i, fid in enumerate(sorted(rt.table)):
+            kind[b, i] = int(rt.table[fid].spec.slo.kind)
+    measured = _measured_rates(cur, prev, kind, window_s)
+    for b, rt in enumerate(runtimes):
+        n_b = flowsets[b].n
+        cur_b = {k: v[b, :n_b] for k, v in cur.items()}
+        prev_b = {k: v[b, :n_b] for k, v in prev.items()}
+        reports[b].append(rt._window_pass(cur_b, prev_b, window_s, t_end_s,
+                                          measured[b]))
+        rt._prev_counters = cur_b
+    return cur
+
+
+def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
+                      total_ticks: int, window_ticks: int,
+                      tick_cycles: int = 8,
+                      seeds: Sequence[int] | None = None,
+                      arrivals: Sequence[tuple[np.ndarray, np.ndarray]]
+                      | None = None,
+                      load_ref_gbps: Sequence[dict[int, float] | None]
+                      | dict[int, float] | None = None,
+                      sim_kwargs: dict[str, Any] | None = None):
+    """Run B client servers' managed dataplanes as ONE compiled program.
+
+    The serial ``ArcusRuntime.run_managed`` drives one dataplane per call;
+    this lifts the identical window loop across a *fleet*: per-server
+    FlowSets (different flow counts allowed), accelerator tables (different
+    accelerator counts allowed), arrival traces and TBState registers stack
+    along a leading fleet axis into ``engine.run_window_batch``, and every
+    window's register writes resume the same donated batched carry.  All
+    servers must share ``clock_hz`` and the structural SimConfig (windows,
+    queue depths) — that shared signature is exactly what makes the whole
+    heterogeneous fleet one compiled engine entry.
+
+    Between windows the Algorithm 1 pass (measurement, violation check,
+    token-bucket re-provisioning, path selection) runs fleet-vectorized
+    (see ``_fleet_algorithm1``).  A trailing partial window runs as one
+    final short window, exactly like the serial path.
+
+    Counters, WindowReports and the runtimes' post-run control state are
+    bitwise-equal to B serial ``run_managed(seed=seeds[b], ...)`` calls.
+
+    Returns ``(results, reports)``: one last-window ``SimResult`` (with the
+    full completion-history ring) and one ``list[WindowReport]`` per
+    server."""
+    B = len(runtimes)
+    if B == 0:
+        return [], []
+    clock_hz = runtimes[0].clock_hz
+    if any(rt.clock_hz != clock_hz for rt in runtimes):
+        raise ValueError("fleet servers must share clock_hz")
+    if any(not rt.table for rt in runtimes):
+        raise ValueError("every fleet server needs at least one "
+                         "registered flow")
+    seeds_l = list(seeds) if seeds is not None else [0] * B
+    refs_l = (list(load_ref_gbps)
+              if isinstance(load_ref_gbps, (list, tuple))
+              else [load_ref_gbps] * B)
+    if not (len(seeds_l) == B and len(refs_l) == B):
+        raise ValueError("seeds / load_ref_gbps must have one entry "
+                         "per server")
+    cfg = SimConfig(n_ticks=window_ticks, tick_cycles=tick_cycles,
+                    shaping=SHAPING_HW, arbiter=ARB_RR,
+                    **(sim_kwargs or {}))
+    full_cfg = dataclasses.replace(cfg, n_ticks=total_ticks)
+    flowsets = [rt._flowset() for rt in runtimes]
+    atabs = [AccelTable.build(rt.accel_specs, rt.clock_hz)
+             for rt in runtimes]
+    links = [rt.link for rt in runtimes]
+    if arrivals is None:
+        arrivals = [gen_arrivals(flowsets[b], full_cfg, seed=seeds_l[b],
+                                 load_ref_gbps=refs_l[b])
+                    for b in range(B)]
+    # one host->device upload of the stacked full-horizon traces; windows
+    # then pass the same committed buffers
+    arr_t, arr_sz = (jnp.asarray(a) for a in stack_arrivals(list(arrivals)))
+    n_full, rem = divmod(total_ticks, window_ticks)
+    windows = [(w * window_ticks, cfg) for w in range(n_full)]
+    if rem:
+        windows.append((n_full * window_ticks,
+                        dataclasses.replace(cfg, n_ticks=rem)))
+    carry = None
+    prev = None
+    reports: list[list[WindowReport]] = [[] for _ in range(B)]
+    for rt in runtimes:
+        rt._prev_counters = None
+    for t0, wcfg in windows:
+        tbss = [tb.pack([rt.table[f].params for f in sorted(rt.table)])
+                for rt in runtimes]
+        carry = engine.run_window_batch(flowsets, atabs, links, wcfg, tbss,
+                                        arr_t, arr_sz, t0_ticks=t0,
+                                        carry=carry)
+        host = jax.device_get({k: carry[k] for k in _FLEET_POLL_KEYS})
+        prev = _fleet_algorithm1(runtimes, flowsets, host, prev, wcfg, t0,
+                                 reports)
+        flowsets = [rt._flowset() for rt in runtimes]
+    host = jax.device_get({k: carry[k] for k in sim._RESULT_KEYS})
+    t0_last, wcfg_last = windows[-1]
+    results = []
+    for b in range(B):
+        el = {k: v[b] for k, v in host.items()}
+        for k in sim._PER_FLOW_KEYS:
+            el[k] = el[k][:flowsets[b].n]
+        results.append(sim._collect_result(el, wcfg_last, t0_last))
+    return results, reports
+
+
+def register_fleet(runtimes: Sequence[ArcusRuntime],
+                   fleet_specs: Sequence[Sequence[FlowSpec]]
+                   ) -> list[list[bool]]:
+    """Register per-server FlowSpec lists across a fleet, batching the
+    admission-control profiling.
+
+    Round r considers the r-th spec of every server at once: each server's
+    would-be CapacityPlanning context (its accepted peers on the target
+    accelerator plus the candidate) is profiled through
+    ``profile_contexts_multi`` — one compiled engine call per round instead
+    of one serial profiling simulation per (server, flow).  The subsequent
+    ``ArcusRuntime.register`` calls then hit the warmed ProfileTable
+    caches, so accept/reject decisions are identical to serial
+    registration.  Returns per-server accept/reject lists."""
+    results: list[list[bool]] = [[] for _ in runtimes]
+    rounds = max((len(s) for s in fleet_specs), default=0)
+    if len(fleet_specs) != len(runtimes):
+        raise ValueError("fleet_specs must have one spec list per server")
+    for r in range(rounds):
+        jobs = []
+        for b, rt in enumerate(runtimes):
+            if r >= len(fleet_specs[b]):
+                continue
+            accel, _peers, ctx = rt._admission_context(fleet_specs[b][r])
+            jobs.append((rt.profile, accel, ctx))
+        profile_contexts_multi(jobs)
+        for b, rt in enumerate(runtimes):
+            if r < len(fleet_specs[b]):
+                results[b].append(rt.register(fleet_specs[b][r]))
+    return results

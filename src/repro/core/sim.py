@@ -232,6 +232,13 @@ _RESULT_KEYS = ("c_adm_msgs", "c_adm_b_lo", "c_adm_b_hi", "c_done_msgs",
                 "comp_fl", "comp_lat", "comp_t", "comp_sz", "comp_n")
 
 
+def combine_byte_counters(hi, lo) -> np.ndarray:
+    """Recombine the engine's split lo(20 bits)/hi byte counters into exact
+    int64 byte counts — the single definition of the split, shared by
+    ``_collect_result`` and the fleet control plane's counter poll."""
+    return (np.asarray(hi).astype(np.int64) << 20) + np.asarray(lo)
+
+
 def _collect_result(host: dict, cfg: SimConfig, t0_ticks: int) -> SimResult:
     n = int(host["comp_n"])
     cap = cfg.comp_cap
@@ -244,10 +251,10 @@ def _collect_result(host: dict, cfg: SimConfig, t0_ticks: int) -> SimResult:
         order = (np.arange(cap) + start) % cap
     counters = {key: host[key] for key in
                 ("c_adm_msgs", "c_done_msgs", "c_drops", "c_lat_sum")}
-    counters["c_adm_bytes"] = (host["c_adm_b_hi"].astype(np.int64) << 20) \
-        + host["c_adm_b_lo"]
-    counters["c_done_bytes"] = (host["c_done_b_hi"].astype(np.int64) << 20) \
-        + host["c_done_b_lo"]
+    counters["c_adm_bytes"] = combine_byte_counters(host["c_adm_b_hi"],
+                                                    host["c_adm_b_lo"])
+    counters["c_done_bytes"] = combine_byte_counters(host["c_done_b_hi"],
+                                                     host["c_done_b_lo"])
     return SimResult(
         counters=counters,
         comp_flow=host["comp_fl"][:cap][order],
@@ -314,7 +321,9 @@ def simulate_batch(flows, accels, link, cfg,
       the traced system fields (shaping mode, arbiter, software-delay
       model) — heterogeneous baseline systems batch into one engine call;
     * ``accels`` / ``link``: one shared value, or sequences of B for
-      per-element accelerator tables / link specs;
+      per-element accelerator tables / link specs; accelerator tables may
+      have *different accelerator counts* (padded to ``n_accels_max`` and
+      ``ac_mask``-masked in the engine — padded rows are inert);
     * ``stall_mask``: shared [T] mask or per-element [B, T].
 
     Returns one SimResult per batch element, each — counters included —

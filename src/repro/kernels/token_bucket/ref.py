@@ -6,9 +6,6 @@ share one definition of the mechanism.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import token_bucket as tb
 
 

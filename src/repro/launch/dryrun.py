@@ -22,7 +22,6 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
@@ -30,7 +29,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import (ARCH_IDS, SHAPES, get_config,

@@ -17,7 +17,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.registry import ARCH_IDS, get_config, get_reduced_config
 from repro.data.pipeline import DataConfig, SyntheticLM, frontend_stub

@@ -9,9 +9,7 @@ prefill_32k / train_4k never materialize [S, S] score matrices.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

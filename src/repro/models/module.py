@@ -8,7 +8,6 @@ through a rules dict (see repro.distributed.sharding).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -12,9 +12,6 @@ Three entry modes share the block code:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any
 
 import numpy as np
 

@@ -1,8 +1,6 @@
 """Training step: loss, gradients, optimizer update (pjit-ready)."""
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ import dataclasses
 import hashlib
 
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -11,8 +10,7 @@ except ModuleNotFoundError:      # optional dev dep — property tests skip
     from _hypothesis_stub import given, settings, st
 
 from repro.core import baselines, token_bucket as tb
-from repro.core.accelerator import (AcceleratorSpec, AccelTable, CATALOG,
-                                    CURVE_LINEAR)
+from repro.core.accelerator import AccelTable, CATALOG
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import ARB_RR, LinkSpec
 from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SimConfig,

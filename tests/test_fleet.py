@@ -1,0 +1,274 @@
+"""Fleet-scale batching tests: ragged accelerator tables (`ac_mask`) and
+the vmapped `run_managed_batch` control plane.
+
+The acceptance bar throughout is *bitwise equality*: a batched element —
+whatever its flow count or accelerator complement — must produce exactly
+the counters, completion records and WindowReports of its unpadded serial
+run."""
+import numpy as np
+
+from repro.core import baselines, engine, token_bucket as tb
+from repro.core.accelerator import CATALOG, AccelTable
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.profiler import ProfileTable
+from repro.core.runtime import ArcusRuntime, register_fleet, run_managed_batch
+from repro.core.sim import (SHAPING_HW, SHAPING_SW, SimConfig, gen_arrivals,
+                            gen_stall_mask, simulate, simulate_batch,
+                            stack_arrivals)
+
+_EXACT_KEYS = ("c_adm_msgs", "c_done_msgs", "c_drops", "c_adm_bytes",
+               "c_done_bytes")
+
+
+def _assert_equal(serial, batch, label=""):
+    for k in _EXACT_KEYS:
+        assert np.array_equal(serial.counters[k], batch.counters[k]), \
+            (label, k, serial.counters[k], batch.counters[k])
+    np.testing.assert_array_equal(serial.comp_flow, batch.comp_flow)
+    np.testing.assert_array_equal(serial.comp_t_s, batch.comp_t_s)
+
+
+# ---------------------------------------------------------------------------
+# Ragged accelerator tables in simulate_batch
+# ---------------------------------------------------------------------------
+
+
+def _accel_el(n_flows, accel_names, shaping=SHAPING_HW, k_srv=2, seed=None):
+    """One batch element with its own accelerator complement (flows are
+    spread across all of its accelerators)."""
+    A = len(accel_names)
+    specs = [FlowSpec(i, i, Path.FUNCTION_CALL, i % A,
+                      TrafficPattern(1024, load=0.8 / n_flows,
+                                     process="poisson"),
+                      SLO.gbps(5.0 + 3.0 * i))
+             for i in range(n_flows)]
+    flows = FlowSet.build(specs)
+    cfg = SimConfig(n_ticks=5_000, shaping=shaping, k_srv=k_srv, k_eg=8)
+    arr = gen_arrivals(flows, cfg, seed=seed if seed is not None else n_flows,
+                       load_ref_gbps={i: 50.0 for i in range(n_flows)})
+    plans = [tb.params_for_gbps(5.0 + 3.0 * i) for i in range(n_flows)]
+    if shaping == SHAPING_SW:
+        tbs = baselines.make_tb_state(baselines.HOST_TS_REFLEX, plans)
+    else:
+        tbs = tb.pack(plans)
+    atab = AccelTable.build([CATALOG[a] for a in accel_names])
+    return flows, atab, cfg, arr, tbs
+
+
+def test_ragged_accel_batch_matches_serial_bitwise():
+    """simulate_batch over elements with DIFFERENT accelerator counts
+    (padded + ac-masked) returns counters and completion records
+    bitwise-equal to unpadded serial runs — across shaping modes and on
+    both sides of the service-vectorization width threshold (the padded
+    batch engine crosses A*k_srv >= 8 while a narrow serial element does
+    not, so this also pins vec==seq stage equality across engines)."""
+    link = LinkSpec()
+    for k_srv in (2, 4):
+        for shaping in (SHAPING_HW, SHAPING_SW):
+            els = [_accel_el(2, ["synthetic50"], shaping, k_srv),
+                   _accel_el(3, ["synthetic50", "aes256"], shaping, k_srv),
+                   _accel_el(1, ["ipsec32", "sha3_512", "compress"],
+                             shaping, k_srv),
+                   _accel_el(4, ["aes256", "synthetic50"], shaping, k_srv,
+                             seed=9)]
+            stall = None
+            if shaping == SHAPING_SW:
+                stall = np.stack([
+                    gen_stall_mask(e[2], seed=b + 1,
+                                   stall_rate_hz=50_000.0,
+                                   stall_us=(10.0, 60.0))
+                    for b, e in enumerate(els)])
+            serial = [simulate(f, a, link, c, t, *arr,
+                               stall_mask=None if stall is None
+                               else stall[b])
+                      for b, (f, a, c, arr, t) in enumerate(els)]
+            engine.cache_clear()
+            batch = simulate_batch([e[0] for e in els], [e[1] for e in els],
+                                   link, els[0][2], [e[4] for e in els],
+                                   *stack_arrivals([e[3] for e in els]),
+                                   stall_mask=stall)
+            assert engine.cache_info()["entries"] == 1
+            for b, (s, bt) in enumerate(zip(serial, batch)):
+                _assert_equal(s, bt, label=(k_srv, shaping, b))
+
+
+def test_ac_mask_padded_accels_stay_inert():
+    """Stage invariants of the ragged accel padding: a padded accelerator
+    row never enqueues, never serves (all lanes disabled) and never
+    contributes completions."""
+    els = [_accel_el(2, ["synthetic50", "aes256", "ipsec32"]),
+           _accel_el(2, ["synthetic50"])]
+    link = LinkSpec()
+    arr_t, arr_sz = stack_arrivals([e[3] for e in els])
+    raw = engine.run_window_batch([e[0] for e in els],
+                                  [e[1] for e in els], link, els[0][2],
+                                  [e[4] for e in els], arr_t, arr_sz)
+    aq_cnt = np.asarray(raw["aq_cnt"])          # [B, A_max]
+    lanes = np.asarray(raw["lanes"])            # [B, A_max, lmax]
+    assert aq_cnt.shape[1] == 3                 # padded to n_accels_max
+    # element 1 has one real accelerator; rows 1-2 are padding
+    assert np.all(aq_cnt[1, 1:] == 0)
+    assert np.all(lanes[1, 1:] >= 3e38)         # every lane still disabled
+    assert np.all(np.asarray(raw["aq_bytes"])[1, 1:] == 0)
+    # the active rows did real work
+    assert np.asarray(raw["c_done_msgs"])[1, :2].sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Fleet-batched run_managed
+# ---------------------------------------------------------------------------
+
+_FLEET = [
+    # (accel complement, [(slo_gbps, msg_bytes) per flow]) — mixed flow
+    # counts AND mixed accelerator counts across servers
+    (["synthetic50"], [(10.0, 1024), (20.0, 1024)]),
+    (["ipsec32", "synthetic50"], [(8.0, 1500)]),
+    (["synthetic50", "aes256", "ipsec32"],
+     [(6.0, 512), (5.0, 1024), (4.0, 2048)]),
+]
+_SEEDS = [3, 4, 5]
+
+
+def _mk_fleet(profile=None):
+    profile = profile or ProfileTable(n_ticks=8_000)
+    rts, specs = [], []
+    for names, flows in _FLEET:
+        rt = ArcusRuntime([CATALOG[n] for n in names],
+                          profile_table=profile)
+        rts.append(rt)
+        specs.append([FlowSpec(i, i, Path.FUNCTION_CALL,
+                               i % len(names),
+                               TrafficPattern(m, load=0.4),
+                               SLO.gbps(s))
+                      for i, (s, m) in enumerate(flows)])
+    return rts, specs
+
+
+def _refs(specs):
+    return [{i: 32.0 for i in range(len(s))} for s in specs]
+
+
+def _run_serial(total, window):
+    rts, specs = _mk_fleet()
+    for rt, sp in zip(rts, specs):
+        for s in sp:
+            assert rt.register(s)
+    out = [rt.run_managed(total_ticks=total, window_ticks=window,
+                          seed=_SEEDS[b],
+                          load_ref_gbps=_refs(specs)[b])
+           for b, rt in enumerate(rts)]
+    return rts, out
+
+
+def _run_batch(total, window):
+    rts, specs = _mk_fleet()
+    acc = register_fleet(rts, specs)
+    assert all(all(a) for a in acc)
+    engine.cache_clear()
+    res, rep = run_managed_batch(rts, total_ticks=total,
+                                 window_ticks=window, seeds=_SEEDS,
+                                 load_ref_gbps=_refs(specs))
+    return rts, res, rep
+
+
+def _check_fleet_equal(rts_s, serial, rts_b, res_b, rep_b):
+    for b, (res_s, rep_s) in enumerate(serial):
+        assert len(rep_s) == len(rep_b[b])
+        for ws, wb in zip(rep_s, rep_b[b]):
+            assert ws.t_end_s == wb.t_end_s
+            assert ws.measured == wb.measured, (b, ws.measured, wb.measured)
+            assert ws.violated == wb.violated
+            assert ws.reconfigured == wb.reconfigured
+            assert ws.path_changes == wb.path_changes
+        _assert_equal(res_s, res_b[b], label=f"server{b}")
+        # post-run control state (registers, headroom, violation counts)
+        for fid in rts_s[b].table:
+            st_s, st_b = rts_s[b].table[fid], rts_b[b].table[fid]
+            assert st_s.params == st_b.params
+            assert st_s.headroom == st_b.headroom
+            assert st_s.violations == st_b.violations
+            assert st_s.measured == st_b.measured
+
+
+def test_fleet_run_managed_matches_serial_bitwise():
+    """B-server run_managed_batch (mixed flow counts AND mixed accelerator
+    counts) produces counters, completion records, WindowReports and
+    control state bitwise-equal to B serial run_managed loops — as ONE
+    compiled engine entry (the tentpole acceptance criterion)."""
+    rts_s, serial = _run_serial(20_000, 4_000)
+    rts_b, res_b, rep_b = _run_batch(20_000, 4_000)
+    assert engine.cache_info() == {"entries": 1, "traces": 1}
+    assert all(len(r) == 5 for r in rep_b)
+    _check_fleet_equal(rts_s, serial, rts_b, res_b, rep_b)
+
+
+def test_fleet_trailing_partial_window_survives_vmap():
+    """total_ticks % window_ticks != 0 runs the remainder as one short
+    batched window (a second engine entry), still bitwise-equal to the
+    serial partial-window path (regression: the serial fix of PR 2 must
+    survive vmapping)."""
+    rts_s, serial = _run_serial(10_000, 4_000)
+    rts_b, res_b, rep_b = _run_batch(10_000, 4_000)
+    assert engine.cache_info()["entries"] == 2   # full + remainder window
+    assert all(len(r) == 3 for r in rep_b)       # 2 full + 1 partial
+    _check_fleet_equal(rts_s, serial, rts_b, res_b, rep_b)
+    # the tail was really simulated
+    for b in range(len(rep_b)):
+        assert rep_b[b][-1].t_end_s > rep_b[b][-2].t_end_s
+
+
+def test_fleet_report_timestamps_use_sim_clock():
+    """WindowReport.t_end_s must follow the SimConfig clock — matching the
+    serial path's ``result.seconds`` — even when the runtime's control
+    clock differs (regression: the fleet pass once stamped reports with
+    the runtime clock)."""
+    profile = ProfileTable(n_ticks=4_000)
+
+    def mk():
+        rt = ArcusRuntime([CATALOG["synthetic50"]], profile_table=profile,
+                          clock_hz=500e6)
+        assert rt.register(FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                                    TrafficPattern(1024, load=0.4),
+                                    SLO.gbps(10.0)))
+        return rt
+
+    res_s, rep_s = mk().run_managed(total_ticks=8_000, window_ticks=4_000,
+                                    load_ref_gbps={0: 32.0})
+    res_b, rep_b = run_managed_batch([mk()], total_ticks=8_000,
+                                     window_ticks=4_000,
+                                     load_ref_gbps=[{0: 32.0}])
+    assert res_b[0].seconds == res_s.seconds
+    for ws, wb in zip(rep_s, rep_b[0]):
+        assert ws.t_end_s == wb.t_end_s
+        assert ws.measured == wb.measured
+
+
+def test_register_fleet_matches_serial_admission():
+    """register_fleet batches each admission round's profiling but must
+    reproduce serial accept/reject decisions exactly — including
+    rejections (here: a third 10 Gbps flow oversubscribing ipsec32's ~31
+    Gbps profiled capacity)."""
+    def specs_for(fid_slo):
+        return [FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                         TrafficPattern(1500, load=0.9), SLO.gbps(s))
+                for i, s in enumerate(fid_slo)]
+    fleet_slos = [(10.0, 20.0, 10.0), (5.0,), (12.0, 12.0, 12.0)]
+    # serial
+    serial_acc = []
+    pt_s = ProfileTable(n_ticks=8_000)
+    for slos in fleet_slos:
+        rt = ArcusRuntime([CATALOG["ipsec32"]], profile_table=pt_s)
+        serial_acc.append([rt.register(s) for s in specs_for(slos)])
+    # fleet-batched
+    pt_b = ProfileTable(n_ticks=8_000)
+    rts = [ArcusRuntime([CATALOG["ipsec32"]], profile_table=pt_b)
+           for _ in fleet_slos]
+    batch_acc = register_fleet(rts, [specs_for(s) for s in fleet_slos])
+    assert batch_acc == serial_acc
+    assert batch_acc[0] == [True, True, False]   # 40 > profiled ~31 Gbps
+    # identical profiled entries (batched profiling is bitwise-equal)
+    assert set(pt_b.entries) == set(pt_s.entries)
+    for k, e in pt_s.entries.items():
+        assert pt_b.entries[k].capacity_gbps == e.capacity_gbps
+        assert pt_b.entries[k].per_flow_gbps == e.per_flow_gbps

@@ -5,11 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import (ARCH_IDS, LONG_CONTEXT_ARCHS, SHAPES,
+from repro.configs.registry import (ARCH_IDS, LONG_CONTEXT_ARCHS,
                                     get_config, get_reduced_config,
                                     shape_supported)
 from repro.data.pipeline import DataConfig, SyntheticLM, frontend_stub
-from repro.models import module as nn, transformer as T
+from repro.models import transformer as T
 from repro.training import optimizer as opt, train as TR
 
 RNG = np.random.default_rng(0)

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core import engine, policies, token_bucket as tb
 from repro.core.accelerator import CATALOG
-from repro.core.flow import SLO, FlowSpec, Path, SLOKind, TrafficPattern
+from repro.core.flow import SLO, FlowSpec, Path, TrafficPattern
 from repro.core.profiler import CapacityEntry, ProfileTable, context_key
 from repro.core.runtime import ArcusRuntime
 from repro.core.shaper import reshape_decision

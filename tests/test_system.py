@@ -3,16 +3,14 @@
 Full-scale numbers live in benchmarks/ + EXPERIMENTS.md; these assert the
 *direction and mechanism* of each claim quickly enough for CI.
 """
-import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.core import baselines, token_bucket as tb
 from repro.core.accelerator import CATALOG, AccelTable
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import LinkSpec
-from repro.core.sim import SimConfig, gen_arrivals, simulate
+from repro.core.sim import gen_arrivals, simulate
 
 
 def _fig6_mini(sys_name: str, load_x: float = 1.5, n_ticks: int = 50_000):
