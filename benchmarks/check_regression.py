@@ -16,12 +16,21 @@ perf trajectory artifact CI uploads for every PR:
     class;
   * batch-vs-serial and profiler-sweep speedups;
   * engine compile-cache entry/trace counts (a growing count means a PR
-    broke a cache key and reintroduced per-window recompiles).
+    broke a cache key and reintroduced per-window recompiles);
+  * (when ``--pr-placement``/``--baseline-placement`` are given) the
+    fleet-placement decision gate: SLO-aware placement must still admit
+    strictly more of the skewed B=8 stream than per-server admission,
+    the pinned-first-fit parity contract must hold, and per-policy
+    admitted counts must match the committed baseline exactly —
+    placement decisions are deterministic, so ANY drift means a PR
+    changed admission behavior (intentionally or not).
 
 Usage:
     python -m benchmarks.check_regression \
         --pr bench_out/sim_perf.json \
         --baseline benchmarks/results/sim_perf.json \
+        [--pr-placement bench_out/placement.json \
+         --baseline-placement benchmarks/results/placement.json] \
         --out BENCH_pr.json [--max-slowdown 2.0]
 """
 from __future__ import annotations
@@ -55,12 +64,45 @@ def summarize(pr: dict, baseline: dict, max_slowdown: float) -> dict:
     }
 
 
+_PLACEMENT_POLICIES = ("per_server", "first_fit", "best_fit", "slo_aware")
+
+
+def summarize_placement(pr: dict, baseline: dict) -> dict:
+    """Placement decision gate over the B=8 fleet (present in both quick
+    and full runs): the per-tenant landing vectors (server index per
+    tenant, -1 = rejected) per policy vs the committed baseline — so a
+    count-preserving reshuffle of admissions still trips the gate — plus
+    the slo_aware > per_server admission gain and first-fit parity."""
+    b8, base8 = pr["B8"], baseline["B8"]
+    admitted = {p: b8[p]["admitted"] for p in _PLACEMENT_POLICIES}
+    drift = {}
+    for p in _PLACEMENT_POLICIES:
+        if admitted[p] != base8[p]["admitted"]:
+            drift[p] = {"admitted": [admitted[p], base8[p]["admitted"]]}
+        elif b8[p]["decisions"] != base8[p]["decisions"]:
+            drift[p] = {"decisions": [b8[p]["decisions"],
+                                      base8[p]["decisions"]]}
+    gain = admitted["slo_aware"] - admitted["per_server"]
+    return {
+        "admitted_B8": admitted,
+        "gain_slo_aware_vs_per_server": gain,
+        "parity_first_fit_pinned": bool(b8["parity_first_fit_pinned"]),
+        "decision_drift_vs_baseline": drift,
+        "ok": (gain > 0 and not drift
+               and bool(b8["parity_first_fit_pinned"])),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pr", required=True,
                     help="sim_perf.json from this PR's smoke run")
     ap.add_argument("--baseline", required=True,
                     help="committed benchmarks/results/sim_perf.json")
+    ap.add_argument("--pr-placement", default=None,
+                    help="placement.json from this PR's smoke run")
+    ap.add_argument("--baseline-placement", default=None,
+                    help="committed benchmarks/results/placement.json")
     ap.add_argument("--out", default="BENCH_pr.json")
     ap.add_argument("--max-slowdown", type=float, default=2.0)
     args = ap.parse_args()
@@ -69,18 +111,37 @@ def main() -> None:
         pr = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
+    if bool(args.pr_placement) != bool(args.baseline_placement):
+        ap.error("--pr-placement and --baseline-placement must be given "
+                 "together (one alone would silently skip the placement "
+                 "gate)")
     out = summarize(pr, baseline, args.max_slowdown)
+    if args.pr_placement and args.baseline_placement:
+        with open(args.pr_placement) as f:
+            pr_placement = json.load(f)
+        with open(args.baseline_placement) as f:
+            base_placement = json.load(f)
+        out["placement"] = summarize_placement(pr_placement,
+                                               base_placement)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))
+    ok = out["ok"] and out.get("placement", {}).get("ok", True)
     if not out["ok"]:
         print(f"FAIL: cached rerun {out['cached_rerun_us_per_tick']:.1f} "
               f"us/tick is {out['slowdown_vs_baseline_x']:.2f}x the "
               f"committed baseline ({out['baseline_us_per_tick']:.1f}) — "
               f"limit {args.max_slowdown}x", file=sys.stderr)
+    if not out.get("placement", {}).get("ok", True):
+        print("FAIL: placement gate — admission gain lost, parity broken "
+              f"or decisions drifted: {out['placement']}", file=sys.stderr)
+    if not ok:
         sys.exit(1)
     print(f"OK: cached rerun within {args.max_slowdown}x of baseline "
-          f"({out['slowdown_vs_baseline_x']:.2f}x)")
+          f"({out['slowdown_vs_baseline_x']:.2f}x)"
+          + ("" if "placement" not in out else
+             "; placement decisions stable, slo_aware admission gain "
+             f"+{out['placement']['gain_slo_aware_vs_per_server']}"))
 
 
 if __name__ == "__main__":

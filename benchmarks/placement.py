@@ -1,0 +1,191 @@
+"""Fleet admission placement — global CapacityPlanning vs per-server.
+
+Arcus's admission control is SLO-Friendly-or-reject against the profiled
+Capacity(t, X, N) context of ONE server; "SLO beyond the Hardware
+Isolation Limits" is exactly what a tenant hits when its nominal server
+is loaded while a sibling idles.  This benchmark drives the same skewed
+tenant stream (everyone's static assignment lands on the first half of
+the fleet) through four admission schemes:
+
+  per_server — today's ``register_fleet``: the caller's static pin
+               decides, rejections are final
+  first_fit  — ``place_fleet``: first server with profiled headroom
+  best_fit   — tightest post-admission residual capacity
+  slo_aware  — maximum post-admission ``slo_tag`` margin
+
+and reports, per policy and fleet size B ∈ {8, 32} (quick: {8}):
+
+  * admitted / rejected tenant counts (slo_aware must admit strictly
+    more than per_server on the skewed stream — the coordination gap,
+    closed);
+  * aggregate SLO-violation rate of a short managed run over the
+    resulting fleet (violated flow-windows / flow-windows);
+  * profiling cost: every admission round profiles its whole
+    cross-server candidate set through ONE batched
+    ``profile_contexts_multi`` engine call (asserted via
+    ``profiler.profiling_stats`` + engine cache deltas);
+  * the parity contract: pinned first-fit reproduces ``register_fleet``
+    accept/reject decisions exactly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import engine
+from repro.core.accelerator import CATALOG
+from repro.core.flow import SLO, FlowSpec, Path, TrafficPattern
+from repro.core.placement import POLICIES
+from repro.core.profiler import ProfileTable, profiling_stats
+from repro.core.runtime import (ArcusRuntime, place_fleet, register_fleet,
+                                run_managed_batch)
+
+#: heterogeneous accelerator complements, cycled across the fleet; every
+#: server leads with synthetic50 so the reference tenants can land
+#: anywhere, the extras make flow AND accel counts ragged
+_COMPLEMENTS = (
+    ["synthetic50"],
+    ["synthetic50", "aes256"],
+    ["synthetic50", "aes256", "ipsec32"],
+)
+
+#: profiling horizon is mode-independent so quick/full admission
+#: decisions (and the committed baseline) stay identical
+_PROFILE_TICKS = 8_000
+
+_REF_SLO = 9.0          # Gbps per tenant; ~4 tenants fit one synthetic50
+
+
+def _build_fleet(n_servers: int, profile: ProfileTable
+                 ) -> list[ArcusRuntime]:
+    return [ArcusRuntime([CATALOG[n]
+                          for n in _COMPLEMENTS[b % len(_COMPLEMENTS)]],
+                         profile_table=profile)
+            for b in range(n_servers)]
+
+
+def _tenants(b_servers: int):
+    """The skewed stream: 3B reference tenants whose static assignment
+    round-robins over only the first half of the fleet."""
+    hot = max(b_servers // 2, 1)
+    specs, names, pins = [], [], []
+    for i in range(3 * b_servers):
+        specs.append(FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                              TrafficPattern(1024, load=0.5,
+                                             process="poisson"),
+                              SLO.gbps(_REF_SLO)))
+        names.append("synthetic50")
+        pins.append(i % hot)
+    return specs, names, pins
+
+
+def _violation_rate(rts, *, window: int, n_windows: int) -> float:
+    """Aggregate SLO-violation rate of a short managed run over every
+    server that hosts at least one tenant."""
+    active = [rt for rt in rts if rt.table]
+    if not active:
+        return float("nan")
+    refs = [{i: 32.0 for i in range(len(rt.table))} for rt in active]
+    _, reports = run_managed_batch(
+        active, total_ticks=window * n_windows, window_ticks=window,
+        seeds=list(range(len(active))), load_ref_gbps=refs)
+    flows = sum(len(rt.table) for rt in active)
+    viol = sum(len(w.violated) for rep in reports for w in rep)
+    return viol / max(flows * n_windows, 1)
+
+
+def _admit(policy_name: str, rts, specs, names, pins):
+    """Run one admission scheme over a fresh fleet; returns
+    (admitted_count, per-server accept lists for per_server parity)."""
+    if policy_name == "per_server":
+        fleet_specs: list[list[FlowSpec]] = [[] for _ in rts]
+        for s, p in zip(specs, pins):
+            fleet_specs[p].append(s)
+        acc = register_fleet(rts, fleet_specs)
+        return sum(map(sum, acc)), acc
+    placed = place_fleet(rts, specs, policy=POLICIES[policy_name](),
+                         accel_names=names)
+    return sum(p.accepted for p in placed), placed
+
+
+def _decisions(policy_name: str, detail, pins) -> list[int]:
+    """Per-tenant landing decision in stream order (server index, -1 =
+    rejected) — the committed vector ``check_regression`` diffs, so even
+    a count-preserving reshuffle of admissions trips the CI gate."""
+    if policy_name == "per_server":
+        queues = [list(a) for a in detail]
+        return [p if queues[p].pop(0) else -1 for p in pins]
+    return [p.server if p.accepted else -1 for p in detail]
+
+
+def run(quick: bool = False) -> list[Row]:
+    sweep = (8,) if quick else (8, 32)
+    window = 1_500 if quick else 3_000
+    n_windows = 3 if quick else 5
+    policies = ("per_server", "first_fit", "best_fit", "slo_aware")
+    rows, payload = [], {}
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+
+    for B in sweep:
+        specs, names, pins = _tenants(B)
+        rounds = len(specs)
+        b_payload = {"tenants": rounds, "hot_servers": max(B // 2, 1)}
+        # warm the shared ProfileTable once (contexts are keyed by
+        # accel + flows, not server, so one per-server pass covers every
+        # policy's contexts) — the timed walls below then all measure
+        # admission work, not first-touch profiling
+        with Timer() as t_warm:
+            _admit("per_server", _build_fleet(B, profile),
+                   specs, names, pins)
+        b_payload["warmup_profiling_wall_s"] = t_warm.s
+        admitted_by = {}
+        per_server_acc = None
+        for pol in policies:
+            rts = _build_fleet(B, profile)
+            p0, e0 = profiling_stats(), engine.cache_info()
+            with Timer() as t:
+                admitted, detail = _admit(pol, rts, specs, names, pins)
+            p1, e1 = profiling_stats(), engine.cache_info()
+            calls = p1["calls"] - p0["calls"]
+            batches = p1["sim_batches"] - p0["sim_batches"]
+            entries = e1["entries"] - e0["entries"]
+            if pol != "per_server":
+                # ONE batched profiling call per admission round; the
+                # engine compiles at most one signature per launched batch
+                assert calls == rounds, (pol, calls, rounds)
+                assert batches <= rounds, (pol, batches, rounds)
+                assert entries <= max(batches, 1), (pol, entries, batches)
+            admitted_by[pol] = admitted
+            if pol == "per_server":
+                per_server_acc = detail
+            d = dict(admitted=admitted, rejected=rounds - admitted,
+                     decisions=_decisions(pol, detail, pins),
+                     placement_wall_s=t.s,
+                     profile_calls=calls, profile_sim_batches=batches,
+                     profile_contexts=p1["contexts"] - p0["contexts"],
+                     engine_entries_delta=entries,
+                     engine_traces_delta=e1["traces"] - e0["traces"],
+                     slo_violation_rate=_violation_rate(
+                         rts, window=window, n_windows=n_windows))
+            b_payload[pol] = d
+            rows.append(Row(f"placement/B{B}/{pol}",
+                            us_per_tick(t.s, rounds), d))
+
+        # the coordination gap, closed: fleet-wide placement admits
+        # strictly more of the skewed stream than per-server admission
+        gain = admitted_by["slo_aware"] - admitted_by["per_server"]
+        assert gain > 0, admitted_by
+        b_payload["gain_slo_aware_vs_per_server"] = gain
+
+        # parity contract: pinned first-fit IS register_fleet (compared
+        # against the per_server accept lists computed above)
+        placed = place_fleet(_build_fleet(B, profile), specs,
+                             policy=POLICIES["first_fit"](), pinned=pins)
+        parity = all(
+            [p.accepted for p, pin in zip(placed, pins) if pin == b]
+            == per_server_acc[b]
+            for b in range(B))
+        assert parity, "pinned first-fit diverged from register_fleet"
+        b_payload["parity_first_fit_pinned"] = parity
+        payload[f"B{B}"] = b_payload
+
+    save_json("placement", payload)
+    return rows

@@ -7,6 +7,7 @@ Layers:
   shaper     — ReshapeDecision: rate pacing + message re-sizing
   profiler   — offline Capacity(t, X, N) tables
   runtime    — Algorithm 1 control plane (admission, capacity, re-shaping)
+  placement  — fleet admission placement policies over profiled capacities
   baselines  — Host_noTS / Host_TS_* / Bypassed_noTS_panic configurations
   policies   — Reserved / OnDemand / ManagedBurst / Opportunistic SLOs
 """

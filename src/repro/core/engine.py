@@ -996,7 +996,7 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
                      accels: AccelTable | Sequence[AccelTable],
                      link: LinkSpec | Sequence[LinkSpec],
                      cfg: SimConfig | Sequence[SimConfig],
-                     tb_states: Sequence[tb.TBState],
+                     tb_states: Sequence[tb.TBState] | None,
                      arr_t, arr_sz, stall_mask=None, *,
                      t0_ticks: int = 0, carry: dict | None = None) -> dict:
     """Run B independent windows in one compiled ``jax.vmap`` call.
@@ -1016,9 +1016,12 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     Passing back the returned ``carry`` resumes all B dataplanes with fresh
     per-element TBState registers applied (the fleet-scale analogue of
     ``run_window``'s resumption: ``ArcusRuntime.run_managed_batch`` drives
-    its whole window loop through this).  The input carry is **donated** —
-    hand the returned one forward, never reuse the one passed in.  Returns
-    the raw batched carry."""
+    its whole window loop through this).  On resumption ``tb_states=None``
+    skips the register rewrite entirely — the carry's registers are
+    already current (the fast path for a window after which no server
+    reconfigured; bitwise-identical to rewriting the unchanged values).
+    The input carry is **donated** — hand the returned one forward, never
+    reuse the one passed in.  Returns the raw batched carry."""
     if not hasattr(arr_t, "ndim"):       # nested python lists
         arr_t = np.asarray(arr_t)
         arr_sz = np.asarray(arr_sz)
@@ -1031,14 +1034,17 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     accels_l = _as_list(accels, B)
     links_l = _as_list(link, B)
     cfgs_l = _as_list(cfg, B)
+    if tb_states is None and carry is None:
+        raise ValueError("tb_states=None is only valid when resuming a "
+                         "carry (initial registers are required)")
     if not (len(accels_l) == B and len(links_l) == B
-            and len(tb_states) == B and len(flows_l) == B
-            and len(cfgs_l) == B):
+            and (tb_states is None or len(tb_states) == B)
+            and len(flows_l) == B and len(cfgs_l) == B):
         raise ValueError(
             f"batch size mismatch: arr_t has B={B} but "
             f"flows={len(flows_l)}, accels={len(accels_l)}, "
-            f"links={len(links_l)}, tb_states={len(tb_states)}, "
-            f"cfgs={len(cfgs_l)}")
+            f"links={len(links_l)}, "
+            f"tb_states={len(tb_states or [])}, cfgs={len(cfgs_l)}")
     cfg0 = cfgs_l[0]
     if any(_static_cfg(c) != _static_cfg(cfg0) for c in cfgs_l[1:]):
         raise ValueError(
@@ -1110,15 +1116,17 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
             _window_stall(stall_np, cfg0, t0_ticks), bool)
         axes["stall"] = 0 if stall_batched else None
 
-    tb_padded = [pad_tb_state(tb_states[b], n_max) for b in range(B)]
     if carry is None:
+        tb_padded = [pad_tb_state(tb_states[b], n_max) for b in range(B)]
         carries = [init_carry(flows_l[b], padded_l[b], cfg0, tb_padded[b],
                               n_flows=n_max)
                    for b in range(B)]
         carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
-    else:
+    elif tb_states is not None:
         # resumed fleet window: write only the per-element parameter
-        # "registers" (stacked [B, n_max] leaves), like run_window does
+        # "registers" (stacked [B, n_max] leaves), like run_window does;
+        # tb_states=None resumes without touching the registers
+        tb_padded = [pad_tb_state(tb_states[b], n_max) for b in range(B)]
         stacked_tb = jax.tree_util.tree_map(
             lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *tb_padded)
         carry = reconfigure_carry(carry, stacked_tb)

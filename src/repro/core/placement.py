@@ -1,0 +1,148 @@
+"""Fleet admission placement — CapacityPlanning lifted fleet-wide.
+
+Arcus's CapacityPlanning (Sec. 3.3, 4.3) admits a flow only if the
+profiled Capacity(t, X, N) context of the target accelerator stays
+SLO-Friendly.  Run per client server that is a *local* decision: the
+caller pre-picks a server, and a flow rejected on a loaded server dies
+even when a sibling server has profiled headroom — the coordination gap
+"SLO beyond the Hardware Isolation Limits" describes when per-device
+isolation is managed in isolation.
+
+This module closes the gap with a pluggable *placement* layer: a
+``PlacementPolicy`` ranks the fleet-wide candidate set (every compatible
+(server, accelerator) pair, each carrying its profiled would-be context),
+and ``runtime.place_fleet`` drives one admission round per tenant,
+batching the whole round's cross-server candidate profiling into ONE
+``profiler.profile_contexts_multi`` engine call.
+
+Policies (all deterministic):
+
+* ``FirstFit``    — first feasible candidate in (server, accelerator)
+                    enumeration order.  Pinned to a fixed server it
+                    reproduces per-server ``register_fleet`` decisions
+                    exactly (the parity contract).
+* ``BestFit``     — feasible candidate with the smallest post-admission
+                    residual capacity (tightest fit: keeps the largest
+                    holes open for future large tenants).
+* ``SLOAware``    — feasible candidate maximizing the post-admission
+                    ``slo_tag`` margin (distance of the would-be context
+                    from its nearest capacity/ceiling constraint) — it
+                    shops every server's accelerator complement and lands
+                    the tenant where the fleet keeps the most SLO slack.
+
+For the scoring policies (``BestFit``, ``SLOAware``) ties break on a
+*canonical server key* (accelerator complement + registered flow ids),
+not the presentation index, so a permuted ``runtimes`` sequence places
+every tenant on the same physical server (only true clones — identical
+complement AND identical registered set — fall back to presentation
+order).  ``FirstFit`` is deterministic for a *given* server order but,
+by definition, follows that order — permuting the fleet permutes its
+picks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.flow import FlowSpec
+from repro.core.profiler import CapacityEntry
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One (server, accelerator) landing option for a tenant, with the
+    profiled would-be context it creates."""
+
+    server: int                    # index into the runtimes sequence
+    accel_id: int                  # accelerator index on that server
+    spec: FlowSpec                 # tenant spec rebound to accel_id
+    entry: CapacityEntry           # profiled post-admission context
+    slo_gbps: tuple[float, ...]    # canonical-order SLO vector (w/ tenant)
+    feasible: bool                 # entry.slo_tag(slo_gbps)
+    margin: float                  # entry.slo_margin(slo_gbps)
+    residual: float                # entry.residual_gbps(slo_gbps)
+    server_key: tuple              # canonical tie-break identity
+
+
+@dataclasses.dataclass
+class Placement:
+    """Outcome of one admission round, aligned with ``place_fleet``'s
+    input specs."""
+
+    spec: FlowSpec
+    server: int | None             # None = rejected fleet-wide
+    accel_id: int | None
+    accepted: bool
+    n_candidates: int
+    n_feasible: int
+
+
+def server_key(runtime) -> tuple:
+    """Canonical identity of a server for policy tie-breaks: accelerator
+    complement (ordered — it defines accel ids) plus the registered flow
+    ids.  Invariant under permutation of the ``runtimes`` sequence."""
+    return (tuple(a.name for a in runtime.accel_specs),
+            tuple(sorted(runtime.table)))
+
+
+class PlacementPolicy:
+    """Chooses where (if anywhere) a tenant lands, given the profiled
+    fleet-wide candidate set of one admission round.
+
+    ``select`` sees every candidate — feasible or not — in (server,
+    accelerator) enumeration order and returns the winner or ``None``
+    (reject).  Implementations must be deterministic functions of the
+    candidate set; use ``_tie_key`` so equal scores resolve by canonical
+    server identity rather than presentation order."""
+
+    name = "base"
+
+    def select(self, candidates: list[Candidate]) -> Candidate | None:
+        raise NotImplementedError
+
+    @staticmethod
+    def _tie_key(c: Candidate) -> tuple:
+        return (c.server_key, c.accel_id, c.server)
+
+
+class FirstFit(PlacementPolicy):
+    """First feasible candidate in enumeration order.  With ``pinned``
+    servers this is exactly today's per-server admission."""
+
+    name = "first_fit"
+
+    def select(self, candidates: list[Candidate]) -> Candidate | None:
+        for c in candidates:
+            if c.feasible:
+                return c
+        return None
+
+
+class BestFit(PlacementPolicy):
+    """Smallest post-admission residual capacity among feasible
+    candidates (classic best-fit packing on the profiled capacities)."""
+
+    name = "best_fit"
+
+    def select(self, candidates: list[Candidate]) -> Candidate | None:
+        feasible = [c for c in candidates if c.feasible]
+        if not feasible:
+            return None
+        return min(feasible, key=lambda c: (c.residual, self._tie_key(c)))
+
+
+class SLOAware(PlacementPolicy):
+    """Largest post-admission ``slo_tag`` margin among feasible
+    candidates: the landing spot whose would-be context keeps the most
+    normalized headroom to its nearest constraint (aggregate capacity or
+    a per-flow contention ceiling)."""
+
+    name = "slo_aware"
+
+    def select(self, candidates: list[Candidate]) -> Candidate | None:
+        feasible = [c for c in candidates if c.feasible]
+        if not feasible:
+            return None
+        return min(feasible, key=lambda c: (-c.margin, self._tie_key(c)))
+
+
+POLICIES = {p.name: p for p in (FirstFit, BestFit, SLOAware)}

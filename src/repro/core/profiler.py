@@ -89,16 +89,42 @@ class CapacityEntry:
         ``slo_gbps`` aligns positionally with ``per_flow_gbps`` (canonical
         context order) when the lengths match; aggregate-style queries
         (fewer SLOs than profiled flows) are checked against the best
-        single-flow ceiling."""
+        single-flow ceiling.
+
+        Defined as ``slo_margin >= 0`` — one copy of the constraint
+        logic; the normalization there preserves every inequality's sign
+        exactly, so decisions are identical to checking the raw
+        inequalities."""
+        return self.slo_margin(slo_gbps, margin) >= 0
+
+    def residual_gbps(self, slo_gbps: list[float],
+                      margin: float = 0.02) -> float:
+        """Aggregate profiled capacity left once the context's SLO vector is
+        honored (negative = oversubscribed).  The quantity best-fit
+        placement packs on: the server whose post-admission residual is
+        smallest-but-nonnegative is the tightest fit."""
+        return self.capacity_gbps * (1 - margin) - sum(slo_gbps)
+
+    def slo_margin(self, slo_gbps: list[float], margin: float = 0.02
+                   ) -> float:
+        """Worst-case normalized headroom across every ``slo_tag``
+        inequality: min of (limit - demand) / limit over the aggregate
+        capacity and the per-flow contention ceilings.  Sign-consistent
+        with ``slo_tag`` (>= 0 iff SLO-Friendly); the magnitude is what
+        SLO-aware placement maximizes — how far the post-admission context
+        sits from its nearest constraint."""
         cap = self.capacity_gbps * (1 - margin)
-        if sum(slo_gbps) > cap:
-            return False
+        m = (cap - sum(slo_gbps)) / max(cap, 1e-12)
         n = len(self.per_flow_gbps)
         ceil = [n * g * (1 - margin) for g in self.per_flow_gbps]
         if n and len(slo_gbps) == n:
-            return all(s <= c for s, c in zip(slo_gbps, ceil))
-        best = max(ceil, default=cap)
-        return all(s <= best for s in slo_gbps)
+            pairs = zip(slo_gbps, ceil)
+        else:
+            best = max(ceil, default=cap)
+            pairs = ((s, best) for s in slo_gbps)
+        for s, c in pairs:
+            m = min(m, (c - s) / max(c, 1e-12))
+        return m
 
 
 def _context_specs(flows: list[tuple[Path, int, float]]) -> list[FlowSpec]:
@@ -210,6 +236,24 @@ class ProfileTable:
         return t
 
 
+#: running counters over batched profiling: ``calls`` = invocations of
+#: ``profile_contexts_multi``, ``sim_batches`` = compiled ``simulate_batch``
+#: launches it issued (0 when every context was a cache hit), ``contexts``
+#: = cache-missing contexts actually simulated.  ``runtime.place_fleet``'s
+#: one-engine-call-per-admission-round contract is asserted against these.
+_PROFILING_STATS = {"calls": 0, "sim_batches": 0, "contexts": 0}
+
+
+def profiling_stats() -> dict[str, int]:
+    """Snapshot of the batched-profiling counters (see above)."""
+    return dict(_PROFILING_STATS)
+
+
+def profiling_stats_clear() -> None:
+    for k in _PROFILING_STATS:
+        _PROFILING_STATS[k] = 0
+
+
 def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
                                                 AcceleratorSpec,
                                                 list[tuple[Path, int,
@@ -225,6 +269,7 @@ def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
     the call; per-table links ride the batch's link axis).  Entries are
     bitwise-identical to serial ``profile_context`` runs and are written
     into each job's own table.  Returns entries aligned with ``jobs``."""
+    _PROFILING_STATS["calls"] += 1
     keys = [context_key(a.name, f) for _, a, f in jobs]
     todo: dict[tuple[int, str], tuple["ProfileTable", str, AcceleratorSpec,
                                       list]] = {}
@@ -238,6 +283,8 @@ def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
         groups.setdefault((table.n_ticks, table.tick_cycles),
                           []).append(item)
     for items in groups.values():
+        _PROFILING_STATS["sim_batches"] += 1
+        _PROFILING_STATS["contexts"] += len(items)
         cfg = items[0][0]._cfg()
         fsets, atabs, tbss, arrs, ns, links = [], [], [], [], [], []
         for table, key, accel, flows in items:

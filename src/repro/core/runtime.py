@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, sim
+from repro.core import engine, placement, sim
 from repro.core import token_bucket as tb
 from repro.core.accelerator import AccelTable, AcceleratorSpec
 from repro.core.flow import (PATH_INGRESS_DIR, FlowSet, FlowSpec, Path,
@@ -107,16 +107,28 @@ class ArcusRuntime:
         ctx = [(s.path, s.pattern.msg_bytes, s.pattern.load) for s in peers]
         return accel, peers, ctx
 
+    def _admission_check(self, spec: FlowSpec, _context=None):
+        """CapacityPlanning(CHECK) with its evidence: (SLO-Friendly?,
+        CapacityEntry, canonical-order SLO vector, slo_margin).
+        ``place_fleet`` scores candidates with exactly this tuple — and
+        passes back the (accel, peers, ctx) triple it already built for
+        profiling — so a feasible candidate is by construction one
+        ``register`` will accept."""
+        accel, peers, ctx = (_context if _context is not None
+                             else self._admission_context(spec))
+        entry = self.profile.capacity(accel, ctx)
+        # per-flow SLO vector in the entry's canonical context order
+        slo_gbps = [self._slo_gbps(peers[i]) for i in canonical_order(ctx)]
+        margin = entry.slo_margin(slo_gbps)
+        # slo_tag is defined as slo_margin >= 0 — one decision, one copy
+        return margin >= 0, entry, slo_gbps, margin
+
     def _admission_control(self, spec: FlowSpec) -> bool:
         """CapacityPlanning(CHECK): the profiled capacity of the would-be
         context must cover every flow's SLO — in aggregate, and per flow
         (a small-message flow cannot be promised more than contention lets
         one flow reach, see ``CapacityEntry.slo_tag``)."""
-        accel, peers, ctx = self._admission_context(spec)
-        entry = self.profile.capacity(accel, ctx)
-        # per-flow SLO vector in the entry's canonical context order
-        return entry.slo_tag([self._slo_gbps(peers[i])
-                              for i in canonical_order(ctx)])
+        return self._admission_check(spec)[0]
 
     def _slo_gbps(self, spec: FlowSpec) -> float:
         if spec.slo.kind == SLOKind.GBPS:
@@ -150,9 +162,13 @@ class ArcusRuntime:
         completion history ring — and the list of WindowReports)."""
         flows = self._flowset()
         atab = AccelTable.build(self.accel_specs, self.clock_hz)
+        # the dataplane runs on the runtime's clock: arrival rates, link
+        # bandwidth, window seconds and report timestamps all derive from
+        # the same SimConfig clock (an explicit sim_kwargs clock still wins)
+        sim_kw = dict(sim_kwargs or {})
+        sim_kw.setdefault("clock_hz", self.clock_hz)
         cfg = SimConfig(n_ticks=window_ticks, tick_cycles=tick_cycles,
-                        shaping=SHAPING_HW, arbiter=ARB_RR,
-                        **(sim_kwargs or {}))
+                        shaping=SHAPING_HW, arbiter=ARB_RR, **sim_kw)
         full_cfg = dataclasses.replace(cfg, n_ticks=total_ticks)
         if arrivals is None:
             arrivals = gen_arrivals(flows, full_cfg, seed=seed,
@@ -185,7 +201,8 @@ class ArcusRuntime:
     # Algorithm 1 main loop body (lines 3-6)
     # ------------------------------------------------------------------
     def _algorithm1_pass(self, result, cfg: SimConfig) -> WindowReport:
-        window_s = cfg.n_ticks * cfg.tick_cycles / self.clock_hz
+        window_s = cfg.seconds   # the dataplane clock (== self.clock_hz
+                                 # unless sim_kwargs overrode it)
         cur = {k: np.array(v) for k, v in result.counters.items()}
         prev = self._prev_counters or {k: np.zeros_like(v)
                                        for k, v in cur.items()}
@@ -326,13 +343,10 @@ def _fleet_algorithm1(runtimes: Sequence[ArcusRuntime],
     ``_measured_rates`` slab); the per-flow violation/ReAdjustPattern body
     is the exact serial code path (``ArcusRuntime._window_pass``), so
     fleet decisions are the serial decisions by construction."""
-    clock_hz = runtimes[0].clock_hz
     cur = _fleet_counters(host)
     if prev is None:
         prev = {k: np.zeros_like(v) for k, v in cur.items()}
-    window_s = cfg.n_ticks * cfg.tick_cycles / clock_hz
-    # report timestamps use the SimConfig clock, exactly like the serial
-    # path's ``result.seconds`` (the runtime clock only scales window_s)
+    window_s = cfg.seconds
     t_end_s = (t0_ticks + cfg.n_ticks) * cfg.tick_cycles / cfg.clock_hz
     B, n_max = cur["c_done_msgs"].shape
     kind = np.full((B, n_max), -1, np.int32)
@@ -358,7 +372,8 @@ def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
                       | None = None,
                       load_ref_gbps: Sequence[dict[int, float] | None]
                       | dict[int, float] | None = None,
-                      sim_kwargs: dict[str, Any] | None = None):
+                      sim_kwargs: dict[str, Any] | None = None,
+                      _force_rebuild: bool = False):
     """Run B client servers' managed dataplanes as ONE compiled program.
 
     The serial ``ArcusRuntime.run_managed`` drives one dataplane per call;
@@ -374,7 +389,10 @@ def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
     Between windows the Algorithm 1 pass (measurement, violation check,
     token-bucket re-provisioning, path selection) runs fleet-vectorized
     (see ``_fleet_algorithm1``).  A trailing partial window runs as one
-    final short window, exactly like the serial path.
+    final short window, exactly like the serial path.  Register re-packs
+    and FlowSet rebuilds happen per server only after a window that
+    reconfigured that server; a window after which NO server changed
+    resumes the donated carry without any register rewrite at all.
 
     Counters, WindowReports and the runtimes' post-run control state are
     bitwise-equal to B serial ``run_managed(seed=seeds[b], ...)`` calls.
@@ -398,9 +416,10 @@ def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
     if not (len(seeds_l) == B and len(refs_l) == B):
         raise ValueError("seeds / load_ref_gbps must have one entry "
                          "per server")
+    sim_kw = dict(sim_kwargs or {})
+    sim_kw.setdefault("clock_hz", clock_hz)   # see run_managed
     cfg = SimConfig(n_ticks=window_ticks, tick_cycles=tick_cycles,
-                    shaping=SHAPING_HW, arbiter=ARB_RR,
-                    **(sim_kwargs or {}))
+                    shaping=SHAPING_HW, arbiter=ARB_RR, **sim_kw)
     full_cfg = dataclasses.replace(cfg, n_ticks=total_ticks)
     flowsets = [rt._flowset() for rt in runtimes]
     atabs = [AccelTable.build(rt.accel_specs, rt.clock_hz)
@@ -423,16 +442,31 @@ def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
     reports: list[list[WindowReport]] = [[] for _ in range(B)]
     for rt in runtimes:
         rt._prev_counters = None
+    # per-server re-pack / rebuild only when that server's previous window
+    # actually committed a register write or path change; when NO server
+    # did, the engine resumes the carry without any register rewrite at
+    # all (bitwise no-op either way: unchanged registers rewrite their own
+    # values, and refills clamp tokens at bkt_size inside the engine)
+    tbss: list = [None] * B
+    dirty = [False] * B            # the flowsets built above are fresh
     for t0, wcfg in windows:
-        tbss = [tb.pack([rt.table[f].params for f in sorted(rt.table)])
-                for rt in runtimes]
-        carry = engine.run_window_batch(flowsets, atabs, links, wcfg, tbss,
-                                        arr_t, arr_sz, t0_ticks=t0,
+        for b, rt in enumerate(runtimes):
+            if tbss[b] is None or dirty[b]:
+                tbss[b] = tb.pack([rt.table[f].params
+                                   for f in sorted(rt.table)])
+                if dirty[b]:
+                    flowsets[b] = rt._flowset()
+        writes = tbss if (carry is None or any(dirty)
+                          or _force_rebuild) else None
+        carry = engine.run_window_batch(flowsets, atabs, links, wcfg,
+                                        writes, arr_t, arr_sz, t0_ticks=t0,
                                         carry=carry)
         host = jax.device_get({k: carry[k] for k in _FLEET_POLL_KEYS})
         prev = _fleet_algorithm1(runtimes, flowsets, host, prev, wcfg, t0,
                                  reports)
-        flowsets = [rt._flowset() for rt in runtimes]
+        dirty = [_force_rebuild or bool(reports[b][-1].reconfigured
+                                        or reports[b][-1].path_changes)
+                 for b in range(B)]
     host = jax.device_get({k: carry[k] for k in sim._RESULT_KEYS})
     t0_last, wcfg_last = windows[-1]
     results = []
@@ -457,11 +491,17 @@ def register_fleet(runtimes: Sequence[ArcusRuntime],
     of one serial profiling simulation per (server, flow).  The subsequent
     ``ArcusRuntime.register`` calls then hit the warmed ProfileTable
     caches, so accept/reject decisions are identical to serial
-    registration.  Returns per-server accept/reject lists."""
+    registration.  Returns per-server accept/reject lists.
+
+    An empty per-server list is valid (that server registers nothing);
+    a ``fleet_specs``/``runtimes`` length mismatch is rejected before any
+    profiling or registration starts."""
+    if len(fleet_specs) != len(runtimes):
+        raise ValueError(
+            f"fleet_specs must have one spec list per server "
+            f"(got {len(fleet_specs)} lists for {len(runtimes)} servers)")
     results: list[list[bool]] = [[] for _ in runtimes]
     rounds = max((len(s) for s in fleet_specs), default=0)
-    if len(fleet_specs) != len(runtimes):
-        raise ValueError("fleet_specs must have one spec list per server")
     for r in range(rounds):
         jobs = []
         for b, rt in enumerate(runtimes):
@@ -474,3 +514,109 @@ def register_fleet(runtimes: Sequence[ArcusRuntime],
             if r < len(fleet_specs[b]):
                 results[b].append(rt.register(fleet_specs[b][r]))
     return results
+
+
+# ---------------------------------------------------------------------------
+# Fleet admission placement: one fleet making one admission decision
+# ---------------------------------------------------------------------------
+
+
+def _compatible_accels(rt: ArcusRuntime, spec: FlowSpec,
+                       accel_name: str | None) -> list[int]:
+    """Accelerator indices on ``rt`` the spec may land on: every
+    complement member with the required accelerator name when one is
+    given, else the spec's own positional ``accel_id`` (the per-server
+    interpretation ``register_fleet`` uses)."""
+    if accel_name is None:
+        return ([spec.accel_id]
+                if 0 <= spec.accel_id < len(rt.accel_specs) else [])
+    return [a for a, s in enumerate(rt.accel_specs) if s.name == accel_name]
+
+
+def place_fleet(runtimes: Sequence[ArcusRuntime],
+                specs: Sequence[FlowSpec], *,
+                policy: placement.PlacementPolicy | None = None,
+                pinned: Sequence[int | None] | None = None,
+                accel_names: Sequence[str | None] | None = None
+                ) -> list[placement.Placement]:
+    """Fleet-level admission placement (the CapacityPlanning admission of
+    Algorithm 1, shopped across every client server).
+
+    Tenants are placed one admission round each, in order.  A round
+    enumerates every compatible (server, accelerator) landing option —
+    all servers, or only ``pinned[i]`` when given; the accelerator
+    matching ``accel_names[i]`` on each server, or the spec's positional
+    ``accel_id`` when no name is given — and profiles ALL their would-be
+    Capacity(t, X, N) contexts through ONE
+    ``profiler.profile_contexts_multi`` engine call (B servers x
+    candidate contexts, ragged flow and accel counts).  The policy then
+    picks among the profiled candidates (``placement.FirstFit`` /
+    ``BestFit`` / ``SLOAware``); the winner is registered on its server
+    via the ordinary ``ArcusRuntime.register`` path (a warmed-cache hit,
+    so placement can never admit what per-server admission would
+    reject).  A tenant is rejected only when NO server fits.
+
+    Parity contract: with ``policy=FirstFit()`` and every spec pinned to
+    its original server this reproduces ``register_fleet``'s
+    accept/reject decisions exactly — fleet placement strictly widens
+    per-server admission, never changes it.
+
+    Returns one ``placement.Placement`` per input spec."""
+    policy = policy or placement.FirstFit()
+    B = len(runtimes)
+    specs = list(specs)
+    pins = list(pinned) if pinned is not None else [None] * len(specs)
+    names = (list(accel_names) if accel_names is not None
+             else [None] * len(specs))
+    if not (len(pins) == len(specs) and len(names) == len(specs)):
+        raise ValueError(
+            "pinned / accel_names must have one entry per spec")
+    if any(p is not None and not 0 <= p < B for p in pins):
+        raise ValueError("pinned server index out of range")
+    out: list[placement.Placement] = []
+    for spec, pin, name in zip(specs, pins, names):
+        meta = []
+        for b in (range(B) if pin is None else [pin]):
+            rt = runtimes[b]
+            for a in _compatible_accels(rt, spec, name):
+                cand_spec = dataclasses.replace(spec, accel_id=a)
+                meta.append((b, a, cand_spec,
+                             rt._admission_context(cand_spec)))
+        if meta:
+            # ONE batched engine call profiles the whole round's
+            # cross-server candidate set (cache hits simulate nothing)
+            profile_contexts_multi([(runtimes[b].profile, ctx[0], ctx[2])
+                                    for b, _a, _s, ctx in meta])
+        cands = []
+        for b, a, cand_spec, ctx in meta:
+            ok, entry, slo, margin = runtimes[b]._admission_check(
+                cand_spec, ctx)
+            cands.append(placement.Candidate(
+                server=b, accel_id=a, spec=cand_spec, entry=entry,
+                slo_gbps=tuple(slo), feasible=ok, margin=margin,
+                residual=entry.residual_gbps(slo),
+                server_key=placement.server_key(runtimes[b])))
+        chosen = policy.select(cands)
+        if chosen is not None and not chosen.feasible:
+            raise ValueError(
+                f"policy {policy.name!r} selected an infeasible candidate "
+                f"(server {chosen.server}, accel {chosen.accel_id}) — "
+                "select() must return a feasible candidate or None")
+        accepted = False
+        if chosen is not None:
+            accepted = runtimes[chosen.server].register(chosen.spec)
+            if not accepted:
+                # feasibility came from the same cached entry register()
+                # re-reads, so a feasible candidate can only bounce if
+                # register() drifts from _admission_check
+                raise RuntimeError(
+                    f"server {chosen.server} rejected a candidate scored "
+                    "feasible — register() and _admission_check diverged")
+        out.append(placement.Placement(
+            spec=spec,
+            server=None if chosen is None else chosen.server,
+            accel_id=None if chosen is None else chosen.accel_id,
+            accepted=accepted,
+            n_candidates=len(cands),
+            n_feasible=sum(c.feasible for c in cands)))
+    return out

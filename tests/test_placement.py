@@ -1,0 +1,390 @@
+"""Fleet admission placement: policy decisions, per-server parity,
+determinism — plus the control-plane clock and rebuild-skip regressions
+fixed alongside the placement subsystem.
+
+The parity bar mirrors the rest of the fleet layer: placement must never
+*change* a per-server decision, only widen the set of servers a tenant may
+land on — pinned first-fit IS ``register_fleet``, bitwise."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import placement, token_bucket as tb
+from repro.core.accelerator import CATALOG
+from repro.core.flow import SLO, FlowSpec, Path, TrafficPattern
+from repro.core.profiler import (CapacityEntry, ProfileTable,
+                                 profiling_stats)
+from repro.core.runtime import (ArcusRuntime, place_fleet, register_fleet,
+                                run_managed_batch)
+
+_PROFILE_TICKS = 6_000
+
+
+def _spec(fid, slo_gbps, accel_id=0, msg=1024, load=0.5):
+    return FlowSpec(fid, fid, Path.FUNCTION_CALL, accel_id,
+                    TrafficPattern(msg, load=load, process="poisson"),
+                    SLO.gbps(slo_gbps))
+
+
+def _mk_fleet(complements, profile=None):
+    profile = profile or ProfileTable(n_ticks=_PROFILE_TICKS)
+    return [ArcusRuntime([CATALOG[n] for n in names],
+                         profile_table=profile)
+            for names in complements]
+
+
+# ---------------------------------------------------------------------------
+# CapacityEntry margin / residual queries
+# ---------------------------------------------------------------------------
+
+
+def test_slo_margin_sign_matches_slo_tag():
+    """slo_margin >= 0 must agree with slo_tag for every query shape:
+    positional (len match), aggregate-style, and degenerate entries."""
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        n = int(rng.integers(1, 5))
+        per = [float(x) for x in rng.uniform(0.0, 20.0, n)]
+        e = CapacityEntry(float(rng.uniform(1.0, 60.0)), per, 1.0)
+        k = n if rng.random() < 0.7 else int(rng.integers(1, 4))
+        slo = [float(x) for x in rng.uniform(0.0, 50.0, k)]
+        assert (e.slo_margin(slo) >= 0) == e.slo_tag(slo), (e, slo)
+    # residual is the aggregate headroom slo_tag's first clause checks
+    e = CapacityEntry(50.0, [25.0, 25.0], 1.0)
+    assert e.residual_gbps([10.0, 20.0]) == pytest.approx(50.0 * 0.98 - 30)
+    assert e.residual_gbps([50.0, 20.0]) < 0
+
+
+# ---------------------------------------------------------------------------
+# Parity: pinned first-fit == register_fleet, bitwise
+# ---------------------------------------------------------------------------
+
+_COMPLEMENTS = (["ipsec32"],
+                ["ipsec32", "synthetic50"],
+                ["synthetic50", "aes256", "ipsec32"])
+
+#: per-server admission streams including rejections (ipsec32 profiles to
+#: ~31 Gbps at 1500B: servers 0 and 2 each oversubscribe their ipsec32)
+_FLEET_SLOS = ([(0, 10.0, 0), (1, 20.0, 0), (2, 10.0, 0)],
+               [(3, 5.0, 0)],
+               [(4, 12.0, 2), (5, 12.0, 2), (6, 12.0, 2)])
+
+
+def _fleet_specs():
+    return [[_spec(fid, s, accel_id=a, msg=1500, load=0.9)
+             for fid, s, a in slos]
+            for slos in _FLEET_SLOS]
+
+
+def test_first_fit_pinned_reproduces_register_fleet():
+    """place_fleet(FirstFit, pinned to each spec's original server) must
+    reproduce register_fleet's accept/reject decisions exactly — mixed
+    accel-count fleet, including rejections (the acceptance contract)."""
+    base = register_fleet(_mk_fleet(_COMPLEMENTS), _fleet_specs())
+    rts = _mk_fleet(_COMPLEMENTS)
+    flat, pins = [], []
+    for b, server_specs in enumerate(_fleet_specs()):
+        flat.extend(server_specs)
+        pins.extend([b] * len(server_specs))
+    placed = place_fleet(rts, flat, policy=placement.FirstFit(),
+                         pinned=pins)
+    got = [[] for _ in _COMPLEMENTS]
+    for p, b in zip(placed, pins):
+        got[b].append(p.accepted)
+        assert p.server == (b if p.accepted else None)
+    assert got == base
+    # the rejections really happened
+    assert base[0] == [True, True, False]
+    assert base[2] == [True, True, False]
+
+
+def test_place_fleet_relocates_what_per_server_rejects():
+    """The motivating scenario: a tenant stream pinned per-server dies on
+    a loaded server while siblings idle; unpinned placement relocates it
+    (and profiles each round's fleet-wide candidate set through ONE
+    batched profiling call)."""
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+    comps = (["synthetic50"], ["synthetic50"], ["synthetic50"])
+    specs = [_spec(i, 9.0) for i in range(8)]
+    pinned = register_fleet(_mk_fleet(comps, profile),
+                            [specs, [], []])[0]
+    assert not all(pinned)                   # server 0 alone cannot host 8
+
+    rts = _mk_fleet(comps, profile)
+    before = profiling_stats()
+    placed = place_fleet(rts, specs, policy=placement.SLOAware(),
+                         accel_names=["synthetic50"] * len(specs))
+    after = profiling_stats()
+    assert all(p.accepted for p in placed)   # the fleet as a whole fits
+    assert sum(placed[i].accepted for i in range(8)) > sum(pinned)
+    # one profile_contexts_multi call per admission round
+    assert after["calls"] - before["calls"] == len(specs)
+    # every server ended up with at least one tenant (spreading happened)
+    assert all(rt.table for rt in rts)
+
+
+def test_place_fleet_rejects_only_when_no_server_fits():
+    rts = _mk_fleet((["ipsec32"], ["ipsec32"]))
+    big = _spec(0, 100.0, msg=1500, load=0.9)    # > any profiled capacity
+    ok = _spec(1, 5.0, msg=1500, load=0.9)
+    placed = place_fleet(rts, [big, ok], policy=placement.BestFit())
+    assert not placed[0].accepted and placed[0].server is None
+    assert placed[0].n_feasible == 0 and placed[0].n_candidates == 2
+    assert placed[1].accepted                     # later rounds unaffected
+    assert sum(len(rt.table) for rt in rts) == 1
+
+
+def test_place_fleet_name_matching_rebinds_accel_id():
+    """accel_names placement must rebind the spec to the matching accel's
+    index on the landing server, wherever it sits in the complement."""
+    rts = _mk_fleet((["aes256"], ["aes256", "synthetic50"]))
+    placed = place_fleet(rts, [_spec(0, 9.0)],
+                         policy=placement.FirstFit(),
+                         accel_names=["synthetic50"])
+    p = placed[0]
+    assert p.accepted and p.server == 1 and p.accel_id == 1
+    assert rts[1].table[0].spec.accel_id == 1
+    # no server carries the name at all -> rejected with zero candidates
+    none = place_fleet(rts, [_spec(1, 1.0)], accel_names=["nvme_raid0"])
+    assert not none[0].accepted and none[0].n_candidates == 0
+
+
+def test_slo_aware_deterministic_under_permuted_server_order():
+    """SLO-aware scoring ties break on the canonical server key, so a
+    permuted runtimes sequence places every tenant on the same physical
+    server (mixed accel counts; several exact margin ties)."""
+    comps = (["synthetic50"],
+             ["synthetic50", "aes256"],
+             ["aes256", "synthetic50", "ipsec32"],
+             ["synthetic50", "ipsec32"])
+    perm = [2, 0, 3, 1]
+    specs = [_spec(i, 8.0) for i in range(6)]
+    names = ["synthetic50"] * len(specs)
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+
+    rts_a = _mk_fleet(comps, profile)
+    placed_a = place_fleet(rts_a, specs, policy=placement.SLOAware(),
+                           accel_names=names)
+    rts_b = _mk_fleet([comps[i] for i in perm], profile)
+    placed_b = place_fleet(rts_b, specs, policy=placement.SLOAware(),
+                           accel_names=names)
+    for pa, pb in zip(placed_a, placed_b):
+        assert pa.accepted and pb.accepted
+        # same physical server: position b in the permuted fleet hosts
+        # original server perm[b]
+        assert perm[pb.server] == pa.server, (pa, pb)
+        assert pa.accel_id is not None
+
+
+def test_slo_aware_lands_on_most_headroom():
+    """A loaded server and an idle twin: SLO-aware must pick the idle one
+    (margin), while pinned first-fit would have stacked the loaded one."""
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+    rts = _mk_fleet((["synthetic50"], ["synthetic50"]), profile)
+    assert rts[0].register(_spec(100, 20.0))
+    placed = place_fleet(rts, [_spec(0, 9.0)],
+                         policy=placement.SLOAware(),
+                         accel_names=["synthetic50"])
+    assert placed[0].server == 1
+
+
+def test_place_fleet_validates_arguments():
+    rts = _mk_fleet((["ipsec32"],))
+    with pytest.raises(ValueError, match="one entry per spec"):
+        place_fleet(rts, [_spec(0, 1.0)], pinned=[0, 1])
+    with pytest.raises(ValueError, match="out of range"):
+        place_fleet(rts, [_spec(0, 1.0)], pinned=[3])
+    assert not rts[0].table                  # nothing was registered
+
+
+# ---------------------------------------------------------------------------
+# register_fleet argument validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_register_fleet_validates_before_any_work():
+    rts = _mk_fleet(_COMPLEMENTS)
+    with pytest.raises(ValueError, match="one spec list per server"):
+        register_fleet(rts, [[_spec(0, 1.0)]])   # 1 list, 3 servers
+    assert all(not rt.table for rt in rts)       # rejected up front
+    assert all(not rt.profile.entries for rt in rts)
+
+
+def test_register_fleet_allows_empty_server_list():
+    rts = _mk_fleet(_COMPLEMENTS)
+    out = register_fleet(rts, [[_spec(0, 5.0)], [], [_spec(1, 5.0)]])
+    assert out[0] == [True] and out[1] == [] and out[2] == [True]
+    assert not rts[1].table
+
+
+# ---------------------------------------------------------------------------
+# Control-plane clock threading (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _clock_runtime(clock_hz, profile):
+    rt = ArcusRuntime([CATALOG["synthetic50"]], profile_table=profile,
+                      clock_hz=clock_hz)
+    assert rt.register(_spec(0, 10.0))
+    return rt
+
+
+def test_run_managed_threads_runtime_clock_into_windows():
+    """A runtime built with clock_hz=500e6 must run its dataplane, window
+    measurement AND report timestamps on that clock (regression: the
+    window SimConfig silently kept the 250 MHz default, skewing every
+    measured rate by the clock ratio)."""
+    profile = ProfileTable(n_ticks=4_000)
+    rt = _clock_runtime(500e6, profile)
+    res, reports = rt.run_managed(total_ticks=4_000, window_ticks=4_000,
+                                  load_ref_gbps={0: 32.0})
+    window_s = 4_000 * 8 / 500e6
+    assert res.seconds == pytest.approx(window_s)
+    assert reports[0].t_end_s == pytest.approx(window_s)
+    # measured rate and timestamps now agree on ONE clock: the report's
+    # Gbps is exactly the counter delta over the dataplane window
+    want = float(res.counters["c_done_bytes"][0]) * 8 / res.seconds / 1e9
+    assert reports[0].measured[0] == pytest.approx(want, rel=1e-12)
+
+    # fleet path: bitwise-equal to the serial run at the same clock
+    rt_b = _clock_runtime(500e6, profile)
+    res_b, rep_b = run_managed_batch([rt_b], total_ticks=4_000,
+                                     window_ticks=4_000,
+                                     load_ref_gbps=[{0: 32.0}])
+    assert res_b[0].seconds == res.seconds
+    assert rep_b[0][0].t_end_s == reports[0].t_end_s
+    assert rep_b[0][0].measured == reports[0].measured
+    np.testing.assert_array_equal(res.counters["c_done_bytes"],
+                                  res_b[0].counters["c_done_bytes"])
+
+
+def test_run_managed_sim_kwargs_clock_override_wins():
+    """An explicit sim_kwargs clock_hz beats the runtime clock (the
+    documented escape hatch)."""
+    profile = ProfileTable(n_ticks=4_000)
+    rt = _clock_runtime(500e6, profile)
+    res, _ = rt.run_managed(total_ticks=4_000, window_ticks=4_000,
+                            load_ref_gbps={0: 32.0},
+                            sim_kwargs={"clock_hz": 250e6})
+    assert res.seconds == pytest.approx(4_000 * 8 / 250e6)
+
+
+# ---------------------------------------------------------------------------
+# Per-window rebuild skip (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _rebuild_fleet(profile):
+    """Two servers: server 0's 25 Gbps SLO is starved (violations, so
+    reconfigs keep it dirty); server 1 comfortably meets 5 Gbps (clean
+    after window 1 — its re-packs must be skipped)."""
+    rts = _mk_fleet((["synthetic50"], ["synthetic50"]), profile)
+    assert rts[0].register(_spec(0, 25.0, load=0.3))
+    assert rts[1].register(_spec(1, 5.0, load=0.5))
+    return rts
+
+
+def test_fleet_window_rebuild_skipped_for_clean_servers(monkeypatch):
+    """Servers whose window reported no reconfigured/path_changes must not
+    re-pack registers or rebuild FlowSets — with counters, reports and
+    control state bitwise-identical to the always-rebuild path."""
+    profile = ProfileTable(n_ticks=4_000)
+    kwargs = dict(total_ticks=16_000, window_ticks=4_000, seeds=[1, 2],
+                  load_ref_gbps=[{0: 32.0}, {0: 32.0}])
+    rts_f = _rebuild_fleet(profile)
+    res_f, rep_f = run_managed_batch(rts_f, _force_rebuild=True, **kwargs)
+
+    packs = []
+    real_pack = tb.pack
+    monkeypatch.setattr(tb, "pack", lambda ps: packs.append(1) or
+                        real_pack(ps))
+    rts_s = _rebuild_fleet(profile)
+    res_s, rep_s = run_managed_batch(rts_s, **kwargs)
+    # window 0 packs both servers; afterwards a server re-packs exactly
+    # once per window that follows one of its reconfiguring windows —
+    # strictly fewer than the 2 servers x 4 windows of the forced path
+    want_packs = 2 + sum(
+        bool(w.reconfigured or w.path_changes)
+        for rep in rep_s for w in rep[:-1])
+    assert len(packs) == want_packs < 8, (len(packs), want_packs)
+
+    for b in range(2):
+        assert len(rep_f[b]) == len(rep_s[b]) == 4
+        for wf, ws in zip(rep_f[b], rep_s[b]):
+            assert wf.measured == ws.measured
+            assert wf.violated == ws.violated
+            assert wf.reconfigured == ws.reconfigured
+            assert wf.path_changes == ws.path_changes
+        for k in ("c_adm_msgs", "c_done_msgs", "c_drops", "c_adm_bytes",
+                  "c_done_bytes"):
+            np.testing.assert_array_equal(res_f[b].counters[k],
+                                          res_s[b].counters[k])
+        for fid in rts_f[b].table:
+            assert rts_f[b].table[fid].params == rts_s[b].table[fid].params
+            assert (rts_f[b].table[fid].violations
+                    == rts_s[b].table[fid].violations)
+    # the starved flow really did reconfigure (the dirty path was hit)
+    assert any(w.reconfigured for w in rep_s[0])
+
+
+def test_fleet_all_clean_windows_skip_register_writes(monkeypatch):
+    """A fleet with zero violations resumes every later window without any
+    register rewrite (tb_states=None fast path), still bitwise-equal to
+    the forced-rebuild run."""
+    profile = ProfileTable(n_ticks=4_000)
+
+    def mk():
+        rts = _mk_fleet((["synthetic50"], ["synthetic50"]), profile)
+        assert rts[0].register(_spec(0, 3.0, load=0.5))
+        assert rts[1].register(_spec(1, 3.0, load=0.5))
+        return rts
+
+    kwargs = dict(total_ticks=12_000, window_ticks=4_000, seeds=[1, 2],
+                  load_ref_gbps=[{0: 32.0}, {0: 32.0}])
+    res_f, rep_f = run_managed_batch(mk(), _force_rebuild=True, **kwargs)
+    packs = []
+    real_pack = tb.pack
+    monkeypatch.setattr(tb, "pack", lambda ps: packs.append(1) or
+                        real_pack(ps))
+    res_s, rep_s = run_managed_batch(mk(), **kwargs)
+    assert len(packs) == 2                    # window 0 only
+    assert all(not w.reconfigured for rep in rep_s for w in rep)
+    for b in range(2):
+        for wf, ws in zip(rep_f[b], rep_s[b]):
+            assert wf.measured == ws.measured
+        for k in ("c_adm_msgs", "c_done_msgs", "c_done_bytes"):
+            np.testing.assert_array_equal(res_f[b].counters[k],
+                                          res_s[b].counters[k])
+
+
+# ---------------------------------------------------------------------------
+# Policy selection unit behavior (no profiling needed)
+# ---------------------------------------------------------------------------
+
+
+def _cand(server, margin, residual, feasible=True, key=None):
+    return placement.Candidate(
+        server=server, accel_id=0,
+        spec=_spec(0, 1.0), entry=CapacityEntry(50.0, [50.0], 1.0),
+        slo_gbps=(1.0,), feasible=feasible, margin=margin,
+        residual=residual, server_key=key or (("x",), ()))
+
+
+def test_policy_selection_rules():
+    cands = [_cand(0, margin=0.1, residual=5.0),
+             _cand(1, margin=0.6, residual=20.0),
+             _cand(2, margin=0.3, residual=1.0),
+             _cand(3, margin=0.9, residual=30.0, feasible=False)]
+    assert placement.FirstFit().select(cands).server == 0
+    assert placement.BestFit().select(cands).server == 2    # min residual
+    assert placement.SLOAware().select(cands).server == 1   # max margin
+    infeasible = [dataclasses.replace(c, feasible=False) for c in cands]
+    for pol in (placement.FirstFit(), placement.BestFit(),
+                placement.SLOAware()):
+        assert pol.select(infeasible) is None
+    # exact ties resolve by canonical server key, not list position
+    tied = [_cand(0, 0.5, 9.0, key=(("b",), ())),
+            _cand(1, 0.5, 9.0, key=(("a",), ()))]
+    assert placement.SLOAware().select(tied).server == 1
+    assert placement.BestFit().select(tied).server == 1
