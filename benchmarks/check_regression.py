@@ -23,7 +23,15 @@ perf trajectory artifact CI uploads for every PR:
     the pinned-first-fit parity contract must hold, and per-policy
     admitted counts must match the committed baseline exactly —
     placement decisions are deterministic, so ANY drift means a PR
-    changed admission behavior (intentionally or not).
+    changed admission behavior (intentionally or not);
+  * (when ``--pr-churn``/``--baseline-churn`` are given) the
+    tenant-lifecycle churn gate over the fixed B=8 timelines:
+    admitted/departed/migrated counts and per-event landing decisions
+    must match the committed ``benchmarks/results/churn.json`` exactly,
+    the whole timeline must still run as ONE compiled engine entry, and
+    the cross-server reference-flow deviation must stay within 0.5
+    percentage points of the baseline (and on the same side of the
+    paper's 1% target).
 
 Usage:
     python -m benchmarks.check_regression \
@@ -31,6 +39,8 @@ Usage:
         --baseline benchmarks/results/sim_perf.json \
         [--pr-placement bench_out/placement.json \
          --baseline-placement benchmarks/results/placement.json] \
+        [--pr-churn bench_out/churn.json \
+         --baseline-churn benchmarks/results/churn.json] \
         --out BENCH_pr.json [--max-slowdown 2.0]
 """
 from __future__ import annotations
@@ -93,6 +103,54 @@ def summarize_placement(pr: dict, baseline: dict) -> dict:
     }
 
 
+_CHURN_COUNTS = ("admitted", "rejected", "departed", "migrated")
+
+
+def summarize_churn(pr: dict, baseline: dict) -> dict:
+    """Churn decision gate over the fixed B=8 timelines: lifecycle counts
+    and per-event landing decisions are deterministic — any drift means a
+    PR changed admission/placement/departure behavior; the variance and
+    the one-engine-entry contract guard the dataplane side."""
+    drift: dict = {}
+    dev: dict = {}
+    one_entry = True
+    # iterate the UNION of timelines: a rate present on one side only is
+    # itself drift (a PR must not silently shrink gate coverage)
+    for rate in sorted(set(pr["B8"]) | set(baseline["B8"])):
+        if rate not in pr["B8"] or rate not in baseline["B8"]:
+            drift[rate] = {"missing_in": ("pr" if rate not in pr["B8"]
+                                          else "baseline")}
+            continue
+        prr, base = pr["B8"][rate], baseline["B8"][rate]
+        bad = {}
+        for k in _CHURN_COUNTS:
+            if prr[k] != base[k]:
+                bad[k] = [prr[k], base[k]]
+        if not bad and prr["decisions"] != base["decisions"]:
+            bad["decisions"] = [prr["decisions"], base["decisions"]]
+        if not bad and prr["moves"] != base["moves"]:
+            bad["moves"] = [prr["moves"], base["moves"]]
+        if bad:
+            drift[rate] = bad
+        dev[rate] = {
+            "ref_dev_max_pct": prr["ref_dev_max_pct"],
+            "baseline_pct": base["ref_dev_max_pct"],
+            "ok": (abs(prr["ref_dev_max_pct"] - base["ref_dev_max_pct"])
+                   <= 0.5
+                   and prr["var_under_1pct"] == base["var_under_1pct"]),
+        }
+        one_entry &= prr["engine_entries"] == 1
+    return {
+        "counts_B8": {rate: {k: pr["B8"][rate][k] for k in _CHURN_COUNTS}
+                      for rate in pr["B8"]},
+        "decision_drift_vs_baseline": drift,
+        "ref_deviation": dev,
+        "one_engine_entry": one_entry,
+        "ok": (not drift and one_entry
+               and all(d["ok"] for d in dev.values())),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pr", required=True,
@@ -103,6 +161,10 @@ def main() -> None:
                     help="placement.json from this PR's smoke run")
     ap.add_argument("--baseline-placement", default=None,
                     help="committed benchmarks/results/placement.json")
+    ap.add_argument("--pr-churn", default=None,
+                    help="churn.json from this PR's smoke run")
+    ap.add_argument("--baseline-churn", default=None,
+                    help="committed benchmarks/results/churn.json")
     ap.add_argument("--out", default="BENCH_pr.json")
     ap.add_argument("--max-slowdown", type=float, default=2.0)
     args = ap.parse_args()
@@ -115,6 +177,9 @@ def main() -> None:
         ap.error("--pr-placement and --baseline-placement must be given "
                  "together (one alone would silently skip the placement "
                  "gate)")
+    if bool(args.pr_churn) != bool(args.baseline_churn):
+        ap.error("--pr-churn and --baseline-churn must be given together "
+                 "(one alone would silently skip the churn gate)")
     out = summarize(pr, baseline, args.max_slowdown)
     if args.pr_placement and args.baseline_placement:
         with open(args.pr_placement) as f:
@@ -123,10 +188,17 @@ def main() -> None:
             base_placement = json.load(f)
         out["placement"] = summarize_placement(pr_placement,
                                                base_placement)
+    if args.pr_churn and args.baseline_churn:
+        with open(args.pr_churn) as f:
+            pr_churn = json.load(f)
+        with open(args.baseline_churn) as f:
+            base_churn = json.load(f)
+        out["churn"] = summarize_churn(pr_churn, base_churn)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))
-    ok = out["ok"] and out.get("placement", {}).get("ok", True)
+    ok = (out["ok"] and out.get("placement", {}).get("ok", True)
+          and out.get("churn", {}).get("ok", True))
     if not out["ok"]:
         print(f"FAIL: cached rerun {out['cached_rerun_us_per_tick']:.1f} "
               f"us/tick is {out['slowdown_vs_baseline_x']:.2f}x the "
@@ -135,13 +207,19 @@ def main() -> None:
     if not out.get("placement", {}).get("ok", True):
         print("FAIL: placement gate — admission gain lost, parity broken "
               f"or decisions drifted: {out['placement']}", file=sys.stderr)
+    if not out.get("churn", {}).get("ok", True):
+        print("FAIL: churn gate — lifecycle counts/decisions drifted, "
+              "variance moved, or the timeline stopped being one "
+              f"compiled engine entry: {out['churn']}", file=sys.stderr)
     if not ok:
         sys.exit(1)
     print(f"OK: cached rerun within {args.max_slowdown}x of baseline "
           f"({out['slowdown_vs_baseline_x']:.2f}x)"
           + ("" if "placement" not in out else
              "; placement decisions stable, slo_aware admission gain "
-             f"+{out['placement']['gain_slo_aware_vs_per_server']}"))
+             f"+{out['placement']['gain_slo_aware_vs_per_server']}")
+          + ("" if "churn" not in out else
+             "; churn lifecycle decisions stable"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,185 @@
+"""Tenant churn at fleet scale — the lifecycle control plane vs the
+paper's <1% throughput-variance target.
+
+Arcus's Algorithm 1 manages SLOs *continuously*; a real cloud sees
+tenants arrive and depart the whole time.  This benchmark drives a
+B-server managed fleet (heterogeneous accelerator complements, one
+long-lived reference flow per server) through a deterministic churn
+timeline via ``FleetController.run``: every window, ``rate`` tenants
+arrive (placed fleet-wide by SLO-aware scoring) and tenants admitted two
+windows earlier depart — mixed arrivals and departures at every
+boundary.  After the run, a pinned two-tenant burst piles onto server 0
+(the operator's static choice) and ``rebalance()`` migrates it onto the
+capacity churn freed elsewhere in the fleet.
+
+Reported per fleet size B ∈ {8, 32} (quick: {8}; B=8 runs a fixed
+timeline in both modes so the committed ``churn.json`` gates CI smoke
+runs exactly) and per churn rate:
+
+  * admitted / rejected / departed / migrated tenant counts and the
+    per-event landing decisions (the vectors ``check_regression
+    --pr-churn`` diffs against the committed baseline);
+  * cross-server throughput deviation of the reference flows over the
+    whole churn timeline, vs the paper's <1% variance target;
+  * the one-compiled-engine-entry contract: the entire churn timeline —
+    arrivals, departures, lane holes — runs on a single engine entry
+    (admission contexts are pre-warmed, so boundary placements are pure
+    ProfileTable cache hits);
+  * score-cache reuse (``profiling_stats``: ``score_hits``) across the
+    boundary placements and the rebalance sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import engine
+from repro.core.accelerator import CATALOG
+from repro.core.controller import FleetController, TenantEvent
+from repro.core.flow import SLO, FlowSpec, Path, TrafficPattern
+from repro.core.profiler import ProfileTable, profiling_stats
+from repro.core.runtime import ArcusRuntime
+
+_COMPLEMENTS = (
+    ["synthetic50"],
+    ["synthetic50", "aes256"],
+    ["synthetic50", "aes256", "ipsec32"],
+)
+
+#: profiling horizon is mode-independent so quick/full admission
+#: decisions (and the committed baseline) stay identical
+_PROFILE_TICKS = 8_000
+
+REF_SLO = 8.0
+
+#: the B=8 timeline is fixed across quick/full so the committed baseline
+#: gates smoke runs bit-for-bit
+_B8_WINDOW = 1_500
+_B8_WINDOWS = 6
+
+
+def _ref_spec(b: int) -> FlowSpec:
+    return FlowSpec(1000 + b, 1000 + b, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(1024, load=0.35, process="poisson"),
+                    SLO.gbps(REF_SLO))
+
+
+def _tenant(i: int) -> FlowSpec:
+    return FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(1024, load=0.4, process="poisson"),
+                    SLO.gbps(6.0))
+
+
+def _timeline(rate: int, n_windows: int) -> list[TenantEvent]:
+    """Deterministic churn: ``rate`` arrivals per window from window 1,
+    each departing two windows after it arrived (mixed ARRIVE/DEPART at
+    every interior boundary)."""
+    events: list[TenantEvent] = []
+    born: dict[int, int] = {}
+    nid = 0
+    for w in range(1, n_windows):
+        for fid, bw in sorted(born.items()):
+            if bw == w - 2:
+                events.append(TenantEvent.depart(w, tenant_id=fid))
+                del born[fid]
+        if w < n_windows - 1:
+            for _ in range(rate):
+                events.append(TenantEvent.arrive(
+                    w, _tenant(nid), accel_name="synthetic50"))
+                born[nid] = w
+                nid += 1
+    return events
+
+
+def _build(B: int, profile: ProfileTable) -> FleetController:
+    rts = [ArcusRuntime([CATALOG[n]
+                         for n in _COMPLEMENTS[b % len(_COMPLEMENTS)]],
+                        profile_table=profile)
+           for b in range(B)]
+    ctrl = FleetController(rts)
+    acc = ctrl.admit_fleet([[_ref_spec(b)] for b in range(B)])
+    assert all(all(a) for a in acc), "reference-flow admission rejected"
+    return ctrl
+
+
+def _run_one(B: int, rate: int, window: int, n_windows: int,
+             profile: ProfileTable) -> dict:
+    events = _timeline(rate, n_windows)
+    total = window * n_windows
+    kwargs = dict(total_ticks=total, window_ticks=window,
+                  seeds=list(range(B)),
+                  load_ref_gbps=[{0: 32.0}] * B, events=events)
+
+    # warm every admission context on a throwaway clone sharing the
+    # ProfileTable — the timed run's boundary placements then profile
+    # nothing (pure cache hits), keeping the dataplane ONE engine entry
+    _build(B, profile).run(**kwargs)
+
+    ctrl = _build(B, profile)
+    p0 = profiling_stats()
+    engine.cache_clear()
+    with Timer() as t:
+        _results, reports = ctrl.run(**kwargs)
+    info = engine.cache_info()
+    assert info == {"entries": 1, "traces": 1}, info
+    p_run = profiling_stats()
+    # every boundary placement was a pure ProfileTable cache hit
+    assert p_run["contexts"] == p0["contexts"], p_run
+    arrivals = [e for e in ctrl.last_events if e["kind"] == "arrive"]
+    assert all(e["server"] is not None for e in arrivals), \
+        "churn arrival rejected — retune the timeline load"
+    # a pinned burst piles onto server 0 (an operator's static choice);
+    # rebalance then migrates it onto the capacity churn freed elsewhere
+    burst = ctrl.place([_tenant(900 + i) for i in range(2)],
+                       pinned=[0, 0], accel_names=["synthetic50"] * 2)
+    assert all(p.accepted for p in burst), "burst admission rejected"
+    with Timer() as t_reb:
+        moves = ctrl.rebalance()
+    assert moves, "rebalance found no migration for the pinned burst"
+    p1 = profiling_stats()
+
+    # reference-flow throughput across servers, averaged over the whole
+    # churn timeline (the <1% cross-server variance target under churn)
+    ref = np.array([np.mean([w.measured[1000 + b] for w in reports[b]])
+                    for b in range(B)])
+    dev_pct = float(np.max(np.abs(ref - ref.mean()) / ref.mean()) * 100)
+    viol = sum(len(w.violated) for rep in reports for w in rep)
+    return dict(
+        wall_s=t.s, rebalance_wall_s=t_reb.s, servers=B, rate=rate,
+        windows=n_windows, events=len(events),
+        admitted=ctrl.stats["admitted"], rejected=ctrl.stats["rejected"],
+        departed=ctrl.stats["departed"], migrated=ctrl.stats["migrated"],
+        decisions=[[e["kind"], e["tenant"],
+                    -1 if e["server"] is None else e["server"]]
+                   for e in ctrl.last_events],
+        moves=[[m["tenant"], m["src"], m["dst"]] for m in moves],
+        ref_gbps_mean=float(ref.mean()), ref_dev_max_pct=dev_pct,
+        var_under_1pct=bool(dev_pct < 1.0),
+        slo_violations=viol,
+        engine_entries=info["entries"], engine_traces=info["traces"],
+        score_hits=p1["score_hits"] - p0["score_hits"],
+        profile_contexts=p1["contexts"] - p0["contexts"],
+        total_ticks=window * n_windows)
+
+
+def run(quick: bool = False) -> list[Row]:
+    rates = (1, 2)
+    rows, payload = [], {}
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+
+    b8 = {}
+    for rate in rates:
+        d = _run_one(8, rate, _B8_WINDOW, _B8_WINDOWS, profile)
+        b8[f"rate{rate}"] = d
+        rows.append(Row(f"churn/B8/rate{rate}",
+                        us_per_tick(d["wall_s"], 8 * d["total_ticks"]), d))
+    payload["B8"] = b8
+
+    if not quick:
+        d = _run_one(32, 2, 3_000, _B8_WINDOWS, profile)
+        payload["B32"] = {"rate2": d}
+        rows.append(Row("churn/B32/rate2",
+                        us_per_tick(d["wall_s"], 32 * d["total_ticks"]), d))
+
+    save_json("churn", payload)
+    return rows

@@ -20,6 +20,7 @@ MODULES = [
     "sim_perf",                  # engine compile-cache / batching speed
     "fleet_slo",                 # fleet-scale batched control plane
     "placement",                 # fleet admission placement policies
+    "churn",                     # tenant-lifecycle churn timelines
     "table2_shaping_accuracy",   # Table 2
     "fig3_provisioning",         # Fig. 3 / Table 1
     "fig6_throughput_cdf",       # Fig. 6 + Sec 5.2 latency

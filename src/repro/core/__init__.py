@@ -8,9 +8,11 @@ Layers:
   profiler   — offline Capacity(t, X, N) tables
   runtime    — Algorithm 1 control plane (admission, capacity, re-shaping)
   placement  — fleet admission placement policies over profiled capacities
+  controller — tenant-lifecycle control plane (admit/depart/rebalance/run)
   baselines  — Host_noTS / Host_TS_* / Bypassed_noTS_panic configurations
   policies   — Reserved / OnDemand / ManagedBurst / Opportunistic SLOs
 """
+from repro.core.controller import FleetController, TenantEvent
 from repro.core.flow import (SLO, FlowSet, FlowSpec, Path, SLOKind,
                              TrafficPattern)
 from repro.core.token_bucket import (MODE_GBPS, MODE_IOPS, PAPER_TABLE2,
@@ -19,6 +21,7 @@ from repro.core.token_bucket import (MODE_GBPS, MODE_IOPS, PAPER_TABLE2,
 
 __all__ = [
     "SLO", "FlowSet", "FlowSpec", "Path", "SLOKind", "TrafficPattern",
+    "FleetController", "TenantEvent",
     "MODE_GBPS", "MODE_IOPS", "PAPER_TABLE2", "TBParams", "TBState",
     "params_for_gbps", "params_for_iops",
 ]

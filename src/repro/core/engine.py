@@ -218,6 +218,45 @@ def reconfigure_carry(carry: dict, tb_state: tb.TBState) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Membership-change carry resumption (tenant lifecycle)
+# ---------------------------------------------------------------------------
+
+
+def release_flow_lane(carry: dict, b: int, lane: int) -> dict:
+    """Depart: flush one flow lane of a resumed batched carry.
+
+    Queued-but-unadmitted messages are discarded (their bytes were never
+    counted — admission counters tick at grant time) and the lane stops
+    being grant-eligible via the caller's ``fl_mask``; messages already
+    admitted into accelerator/egress queues drain naturally.  Shapes are
+    untouched, so resuming the carry stays on the same compiled engine."""
+    carry = dict(carry)
+    carry["q_cnt"] = carry["q_cnt"].at[b, lane].set(0)
+    carry["sw_pend"] = carry["sw_pend"].at[b, lane].set(0)
+    return carry
+
+
+def recycle_flow_lane(carry: dict, b: int, lane: int) -> dict:
+    """Arrive: reset a (possibly previously occupied) flow lane so no
+    dataplane state leaks from an earlier tenant.
+
+    The arrival pointer rewinds to the lane's (fresh) trace row, the
+    ingress queue and arbiter virtual-finish-time reset, and the token
+    count is pre-set to INF so the next register write's
+    ``min(tokens, bkt_size)`` clamp hands the new tenant a full initial
+    bucket (exactly what ``tb.init(start_full=True)`` grants a freshly
+    built carry).  Cumulative hardware counters are deliberately kept:
+    the control plane measures per-window deltas."""
+    carry = dict(carry)
+    for k in ("q_cnt", "q_head", "arr_ptr", "sw_pend"):
+        carry[k] = carry[k].at[b, lane].set(0)
+    carry["vft"] = carry["vft"].at[b, lane].set(0.0)
+    carry["tb"] = carry["tb"]._replace(
+        tokens=carry["tb"].tokens.at[b, lane].set(INF_I32))
+    return carry
+
+
+# ---------------------------------------------------------------------------
 # Flow / register padding (ragged multi-tenant batching)
 # ---------------------------------------------------------------------------
 
@@ -505,10 +544,19 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
                 & jnp.logical_not(is_stall))
 
         # arbiter key (lower = served first), selected by the traced mode
-        # word; RR cycles over the *active* flows only
+        # word.  Pure RR cycles by lane index modulo the *static* lane
+        # count N: for any active subset this induces exactly the cyclic
+        # lane order after rr_ptr, so it is grant-for-grant identical to
+        # the old modulo-n_act key when active lanes form a prefix AND
+        # stays correct when departures punch holes mid-table (mod n_act
+        # would alias two active lanes onto one key there).  The WRR/WFQ/
+        # priority tie-break term keeps the modulo-n_act *values* so those
+        # float keys stay bitwise-identical between padded and unpadded
+        # runs.
+        rr_cyc = ((iota_n - c["rr_ptr"] - 1) % N).astype(jnp.float32)
         rr_key = ((iota_n - c["rr_ptr"] - 1) % n_act).astype(jnp.float32)
         key = jnp.where(
-            arb_rr, rr_key,
+            arb_rr, rr_cyc,
             jnp.where(arb == ARB_PRIORITY, -fl_prio * 1e6 + rr_key,
                       c["vft"] + 1e-6 * rr_key))        # WRR / WFQ
         key = jnp.where(elig, key, jnp.float32(3e38))
@@ -998,7 +1046,8 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
                      cfg: SimConfig | Sequence[SimConfig],
                      tb_states: Sequence[tb.TBState] | None,
                      arr_t, arr_sz, stall_mask=None, *,
-                     t0_ticks: int = 0, carry: dict | None = None) -> dict:
+                     t0_ticks: int = 0, carry: dict | None = None,
+                     fl_masks: Sequence[np.ndarray] | None = None) -> dict:
     """Run B independent windows in one compiled ``jax.vmap`` call.
 
     Batched per element: arrival trace, TBState registers, and (when
@@ -1021,7 +1070,14 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     already current (the fast path for a window after which no server
     reconfigured; bitwise-identical to rewriting the unchanged values).
     The input carry is **donated** — hand the returned one forward, never
-    reuse the one passed in.  Returns the raw batched carry."""
+    reuse the one passed in.  Returns the raw batched carry.
+
+    ``fl_masks`` (one ``[n_flows_max]`` bool array per element) overrides
+    the default validity masks: the tenant-lifecycle control plane uses it
+    to punch *mid-table holes* (a departed tenant's lane goes inert while
+    every other lane keeps its position, so a resumed carry never needs a
+    re-pack or a recompile).  Without it, masks are the usual active
+    prefix derived from each element's flow count."""
     if not hasattr(arr_t, "ndim"):       # nested python lists
         arr_t = np.asarray(arr_t)
         arr_sz = np.asarray(arr_sz)
@@ -1061,9 +1117,14 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
             f"arr_t flow axis {arr_t.shape[1]} != n_flows_max {n_max} — "
             "see stack_arrivals()")
 
-    flows_batched = (isinstance(flows, (list, tuple))
-                     and (len(set(f.n for f in flows_l)) > 1
-                          or any(f is not flows_l[0] for f in flows_l)))
+    if fl_masks is not None and len(fl_masks) != B:
+        raise ValueError(
+            f"fl_masks must have one mask per element (got {len(fl_masks)} "
+            f"for B={B})")
+    flows_batched = (fl_masks is not None
+                     or (isinstance(flows, (list, tuple))
+                         and (len(set(f.n for f in flows_l)) > 1
+                              or any(f is not flows_l[0] for f in flows_l))))
     accel_batched = isinstance(accels, (list, tuple))
     link_batched = isinstance(link, (list, tuple))
     cfg_batched = (isinstance(cfg, (list, tuple))
@@ -1085,6 +1146,14 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     axes["arr_t"] = axes["arr_sz"] = 0
     if flows_batched:
         per_el = [_flow_args(f, n_max) for f in flows_l]
+        if fl_masks is not None:
+            for p, m in zip(per_el, fl_masks):
+                m = np.asarray(m, bool)
+                if m.shape != (n_max,):
+                    raise ValueError(
+                        f"fl_masks entries must be [{n_max}] bool "
+                        f"(got shape {m.shape})")
+                p["fl_mask"] = m
         for k in per_el[0]:
             args[k] = jnp.stack([jnp.asarray(p[k]) for p in per_el])
             axes[k] = 0

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core import profiler
 from repro.core.flow import FlowSpec
 from repro.core.profiler import CapacityEntry
 
@@ -146,3 +147,71 @@ class SLOAware(PlacementPolicy):
 
 
 POLICIES = {p.name: p for p in (FirstFit, BestFit, SLOAware)}
+
+
+def _score_sig(spec: FlowSpec) -> tuple:
+    """Scoring-relevant identity of a candidate spec.
+
+    A candidate's score — profiled entry, canonical SLO vector, margin,
+    residual, feasibility — is a function of the would-be context, which
+    sees only (path, traffic pattern, SLO); flow/vm ids never enter it.
+    Keying on this signature lets a homogeneous tenant stream (same
+    shape, different ids) reuse scores round over round."""
+    return (int(spec.path), spec.pattern, spec.slo)
+
+
+class ScoreCache:
+    """Stateful candidate scorer: reuse prior-round margins for servers
+    whose tables did not change.
+
+    Placement used to re-score every admission round from scratch, even
+    though a round changes exactly ONE server (the winner's
+    PerFlowStatusTable grows by one tenant, re-keying its would-be
+    contexts) — every other server's candidates for a same-shaped spec
+    are bit-for-bit the previous round's.  The cache keys the scoring
+    fields on (server, accelerator, ``_score_sig(spec)``) and guards them
+    with the runtime's ``lifecycle_version`` (bumped by ``register`` /
+    ``deregister``): a hit replays the stored floats into a fresh
+    ``Candidate`` for the current spec — same margins, same decision —
+    and skips rebuilding + profiling the context entirely; a registration
+    or departure on a server invalidates only that server's entries.
+
+    ``runtime.place_fleet`` / ``FleetController.place`` thread the
+    controller's long-lived cache through their rounds by default; pass
+    your own instance to share scores across call sites.  Hit/miss counts
+    are exposed via ``profiler.profiling_stats()`` (``score_hits`` /
+    ``score_misses``)."""
+
+    def __init__(self):
+        self._scores: dict[tuple, tuple[int, tuple]] = {}
+
+    def lookup(self, runtime, server: int, accel_id: int,
+               spec: FlowSpec) -> Candidate | None:
+        hit = self._scores.get((server, accel_id, _score_sig(spec)))
+        # the guard binds the entry to the exact runtime (its
+        # process-unique _uid — id() could be reused after gc) AND its
+        # membership version: a cache shared across different fleets (or
+        # a rebuilt fleet reusing server indices) must never replay
+        # another runtime's margins
+        if hit is not None and hit[0] == (getattr(runtime, "_uid",
+                                                  id(runtime)),
+                                          runtime.lifecycle_version):
+            profiler._PROFILING_STATS["score_hits"] += 1
+            entry, slo, ok, margin, residual, skey = hit[1]
+            return Candidate(server=server, accel_id=accel_id, spec=spec,
+                             entry=entry, slo_gbps=slo, feasible=ok,
+                             margin=margin, residual=residual,
+                             server_key=skey)
+        profiler._PROFILING_STATS["score_misses"] += 1
+        return None
+
+    def store(self, runtime, server: int, accel_id: int, spec: FlowSpec,
+              c: Candidate) -> None:
+        self._scores[(server, accel_id, _score_sig(spec))] = (
+            (getattr(runtime, "_uid", id(runtime)),
+             runtime.lifecycle_version),
+            (c.entry, c.slo_gbps, c.feasible, c.margin, c.residual,
+             c.server_key))
+
+    def clear(self) -> None:
+        self._scores.clear()

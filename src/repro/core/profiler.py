@@ -142,14 +142,22 @@ class ProfileTable:
     Capacity results."""
 
     def __init__(self, link: LinkSpec | None = None,
-                 *, n_ticks: int = 60_000, tick_cycles: int = 8):
+                 *, n_ticks: int = 60_000, tick_cycles: int = 8,
+                 clock_hz: float | None = None):
         self.entries: dict[str, CapacityEntry] = {}
         self.link = link or LinkSpec()
         self.n_ticks = n_ticks
         self.tick_cycles = tick_cycles
+        # profiling runs on the table's link clock unless explicitly
+        # overridden — dataplane rates, accelerator service cycles and the
+        # profiled window seconds then all derive from ONE clock (the same
+        # threading run_managed got in PR 4; an explicit clock_hz wins)
+        self.clock_hz = float(clock_hz if clock_hz is not None
+                              else self.link.clock_hz)
 
     def _cfg(self) -> SimConfig:
         return SimConfig(n_ticks=self.n_ticks, tick_cycles=self.tick_cycles,
+                         clock_hz=self.clock_hz,
                          shaping=SHAPING_NONE, arbiter=ARB_RR)
 
     def _entry_from_result(self, key: str, res, n: int) -> CapacityEntry:
@@ -169,7 +177,7 @@ class ProfileTable:
             return self.entries[key]
         specs = _context_specs(flows)
         fset = FlowSet.build(specs)
-        atab = AccelTable.build([accel])
+        atab = AccelTable.build([accel], self.clock_hz)
         cfg = self._cfg()
         ref = {i: accel.peak_gbps for i in range(len(specs))}
         arr_t, arr_sz = gen_arrivals(fset, cfg, seed=seed, load_ref_gbps=ref)
@@ -241,7 +249,11 @@ class ProfileTable:
 #: launches it issued (0 when every context was a cache hit), ``contexts``
 #: = cache-missing contexts actually simulated.  ``runtime.place_fleet``'s
 #: one-engine-call-per-admission-round contract is asserted against these.
-_PROFILING_STATS = {"calls": 0, "sim_batches": 0, "contexts": 0}
+#: ``score_hits`` / ``score_misses`` count ``placement.ScoreCache``
+#: candidate-score reuse (a hit skips rebuilding + re-querying the
+#: candidate's would-be context entirely).
+_PROFILING_STATS = {"calls": 0, "sim_batches": 0, "contexts": 0,
+                    "score_hits": 0, "score_misses": 0}
 
 
 def profiling_stats() -> dict[str, int]:
@@ -265,8 +277,9 @@ def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
     typically one per client server in a fleet, each server holding its own
     ProfileTable (possibly with its own LinkSpec).  All cache-missing
     contexts, deduplicated per table, run as ONE ragged ``simulate_batch``
-    per profiling config (tables sharing ``n_ticks``/``tick_cycles`` share
-    the call; per-table links ride the batch's link axis).  Entries are
+    per profiling config (tables sharing ``n_ticks``/``tick_cycles``/
+    ``clock_hz`` share the call; per-table links ride the batch's link
+    axis).  Entries are
     bitwise-identical to serial ``profile_context`` runs and are written
     into each job's own table.  Returns entries aligned with ``jobs``."""
     _PROFILING_STATS["calls"] += 1
@@ -277,10 +290,10 @@ def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
         tk = (id(table), key)
         if key not in table.entries and tk not in todo:
             todo[tk] = (table, key, accel, flows)
-    groups: dict[tuple[int, int], list] = {}
+    groups: dict[tuple[int, int, float], list] = {}
     for item in todo.values():
         table = item[0]
-        groups.setdefault((table.n_ticks, table.tick_cycles),
+        groups.setdefault((table.n_ticks, table.tick_cycles, table.clock_hz),
                           []).append(item)
     for items in groups.values():
         _PROFILING_STATS["sim_batches"] += 1
@@ -292,7 +305,7 @@ def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
             fset = FlowSet.build(specs)
             ref = {i: accel.peak_gbps for i in range(len(specs))}
             fsets.append(fset)
-            atabs.append(AccelTable.build([accel]))
+            atabs.append(AccelTable.build([accel], table.clock_hz))
             tbss.append(baselines.make_tb_state(
                 baselines.HOST_NO_TS,
                 [tb.TBParams(1, 1, 1)] * len(specs)))

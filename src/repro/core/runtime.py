@@ -10,36 +10,39 @@ Runs on every client server; periodically:
 The dataplane is the jitted simulator (`repro.core.sim`); register writes
 are the carry's TBState parameter fields — the MMIO analogue.
 
-Fleet scale: ``run_managed_batch`` drives B client servers' managed
-dataplanes as ONE compiled program — per-server FlowSets (ragged flow
-counts), accelerator complements (ragged accel counts), SLO vectors and
-TBState registers stack along a fleet axis through
-``engine.run_window_batch``; between engine windows the Algorithm 1
-measurement/violation pass runs fleet-vectorized over ``[B, n_max]``
-counter arrays.  ``register_fleet`` batches each admission round's
-CapacityPlanning profiling the same way.  Counters and WindowReports are
-bitwise-equal to B serial ``run_managed`` calls.
+Fleet scale: the tenant-lifecycle controller
+(``repro.core.controller.FleetController``) drives B client servers'
+managed dataplanes as ONE compiled program and owns admission placement,
+departure and rebalancing.  The module-level ``register_fleet`` /
+``place_fleet`` / ``run_managed_batch`` entry points remain as thin
+deprecation shims delegating to it (decision- and counter-bitwise
+compatible); this module keeps the per-server primitives the controller
+composes: ``ArcusRuntime`` (register/deregister, the Algorithm 1 window
+pass) and the fleet measurement helpers.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import warnings
 from typing import Any, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, placement, sim
+from repro.core import placement, sim
 from repro.core import token_bucket as tb
 from repro.core.accelerator import AccelTable, AcceleratorSpec
 from repro.core.flow import (PATH_INGRESS_DIR, FlowSet, FlowSpec, Path,
                              SLOKind)
 from repro.core.interconnect import ARB_RR, LinkSpec
-from repro.core.profiler import (ProfileTable, canonical_order,
-                                 profile_contexts_multi)
+from repro.core.profiler import ProfileTable, canonical_order
 from repro.core.shaper import reshape_decision
-from repro.core.sim import (SHAPING_HW, SimConfig, gen_arrivals, simulate,
-                            stack_arrivals)
+from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals, simulate
+
+
+#: process-unique ArcusRuntime ids (never reused, unlike ``id()``)
+_RUNTIME_UID = itertools.count()
 
 
 @dataclasses.dataclass
@@ -73,13 +76,24 @@ class ArcusRuntime:
                  *, clock_hz: float = 250e6, slo_tol: float = 0.02,
                  alt_paths: dict[int, list[Path]] | None = None):
         self.accel_specs = accels
-        self.link = link or LinkSpec()
-        self.profile = profile_table or ProfileTable(self.link)
         self.clock_hz = clock_hz
+        # the runtime clock threads into every config the runtime builds
+        # itself: a default link (and the ProfileTable riding on it) runs
+        # on the control clock, so dataplane rates, profiled capacities
+        # and window seconds share one clock.  An explicitly passed link
+        # or profile table wins — it is the caller's override.
+        self.link = link if link is not None else LinkSpec(clock_hz=clock_hz)
+        self.profile = profile_table or ProfileTable(self.link)
         self.slo_tol = slo_tol
         self.alt_paths = alt_paths or {}
         self.table: dict[int, FlowStatus] = {}   # PerFlowStatusTable
         self._prev_counters: dict[str, np.ndarray] | None = None
+        self._uid = next(_RUNTIME_UID)   # process-unique identity for
+                                         # ScoreCache guards (id() can be
+                                         # reused after gc; this cannot)
+        self._version = 0        # bumped on register/deregister/path
+                                 # changes — the placement.ScoreCache
+                                 # invalidation guard
 
     # ------------------------------------------------------------------
     # Registration path (Algorithm 1 lines 7-10)
@@ -92,7 +106,29 @@ class ArcusRuntime:
                                     clock_hz=self.clock_hz)
         self.table[spec.flow_id] = FlowStatus(spec=spec,
                                               params=decision.params)
+        self._version += 1
         return True
+
+    def deregister(self, flow_id: int) -> FlowStatus:
+        """Tenant departure: drop the flow from the PerFlowStatusTable.
+
+        Capacity planning sees the shrunk context immediately (the next
+        admission's would-be context no longer includes the tenant, so an
+        admit→depart→admit of the same spec reproduces the original
+        decision from the same cached profile entries).  Raises
+        ``KeyError`` for an unknown flow.  Callers running a live fleet
+        should go through ``FleetController.depart`` — it also frees the
+        tenant's dataplane lane."""
+        st = self.table.pop(flow_id)
+        self._version += 1
+        return st
+
+    @property
+    def lifecycle_version(self) -> int:
+        """Monotonic counter of membership changes (register/deregister);
+        ``placement.ScoreCache`` entries are valid only while the version
+        they were scored at still matches."""
+        return self._version
 
     def _admission_context(self, spec: FlowSpec
                            ) -> tuple[AcceleratorSpec, list[FlowSpec],
@@ -214,21 +250,29 @@ class ArcusRuntime:
                                  measured_row)
 
     def _window_pass(self, cur, prev, window_s: float, t_end_s: float,
-                     measured_row: np.ndarray) -> WindowReport:
+                     measured_row: np.ndarray,
+                     lane_of: dict[int, int] | None = None) -> WindowReport:
         """Per-flow half of the Algorithm 1 window pass: violation check +
         ReAdjustPattern + report assembly.  The single body shared by the
         serial and fleet paths — the fleet's bitwise-equality contract
-        rides on there being exactly one copy of these decisions."""
+        rides on there being exactly one copy of these decisions.
+
+        ``lane_of`` maps flow id -> dataplane lane index in the counter
+        rows; ``None`` means lanes follow sorted-flow-id order (the serial
+        layout).  The lifecycle controller passes its persistent layout,
+        which can differ once departures punch holes."""
         measured, violated, reconfigured, path_changes = {}, [], [], []
         for i, fid in enumerate(sorted(self.table)):
+            lane = i if lane_of is None else lane_of[fid]
             st = self.table[fid]
-            st.measured = float(measured_row[i])
+            st.measured = float(measured_row[lane])
             measured[fid] = st.measured
             if not self._slo_ok(st):
                 st.violations += 1
                 violated.append(fid)
                 old_path = int(st.spec.path)
-                changed = self._re_adjust_pattern(st, cur, prev, window_s)
+                changed = self._re_adjust_pattern(st, cur, prev, window_s,
+                                                  lane_of)
                 if changed:
                     reconfigured.append(fid)
                     if changed == "path":
@@ -244,12 +288,16 @@ class ArcusRuntime:
             return True  # checked from completion records by callers
         return st.measured >= slo.target * (1 - self.slo_tol)
 
-    def _re_adjust_pattern(self, st: FlowStatus, cur, prev, window_s: float):
+    def _re_adjust_pattern(self, st: FlowStatus, cur, prev, window_s: float,
+                           lane_of: dict[int, int] | None = None):
         """ReAdjustPattern (lines 17-21)."""
         changed = None
-        new_path = self._path_selection(st, cur, prev, window_s)
+        new_path = self._path_selection(st, cur, prev, window_s, lane_of)
         if new_path is not None:
             st.spec = dataclasses.replace(st.spec, path=new_path)
+            # a path change re-keys this flow's would-be contexts, so any
+            # ScoreCache margins for this server are stale now
+            self._version += 1
             changed = "path"
         # ReshapeDecision: widen pacing headroom toward the observed deficit
         target = (st.spec.slo.target if st.spec.slo.kind != SLOKind.LATENCY
@@ -268,14 +316,14 @@ class ArcusRuntime:
                 changed = changed or "params"
         return changed
 
-    def _path_selection(self, st: FlowStatus, cur, prev,
-                        window_s: float) -> Path | None:
+    def _path_selection(self, st: FlowStatus, cur, prev, window_s: float,
+                        lane_of: dict[int, int] | None = None) -> Path | None:
         """PathSelection (line 18): move to a less-loaded path if the current
         ingress direction is saturated and an alternative exists."""
         alts = self.alt_paths.get(st.spec.accel_id, [])
         if not alts:
             return None
-        util = self._direction_util(cur, prev, window_s)
+        util = self._direction_util(cur, prev, window_s, lane_of)
         cur_dir = PATH_INGRESS_DIR[st.spec.path]
         if cur_dir == 2 or util[cur_dir] < 0.9:
             return None
@@ -285,13 +333,16 @@ class ArcusRuntime:
                 return p
         return None
 
-    def _direction_util(self, cur, prev, window_s: float) -> np.ndarray:
+    def _direction_util(self, cur, prev, window_s: float,
+                        lane_of: dict[int, int] | None = None) -> np.ndarray:
         h2d_bps = self.link.h2d_gbps * self.link.efficiency * 1e9 / 8
         d2h_bps = self.link.d2h_gbps * self.link.efficiency * 1e9 / 8
         by_dir = np.zeros(3)
         for i, fid in enumerate(sorted(self.table)):
+            lane = i if lane_of is None else lane_of[fid]
             st = self.table[fid]
-            b = (cur["c_adm_bytes"][i] - prev["c_adm_bytes"][i]) / window_s
+            b = (cur["c_adm_bytes"][lane]
+                 - prev["c_adm_bytes"][lane]) / window_s
             d = PATH_INGRESS_DIR[st.spec.path]
             by_dir[d] += b
         return np.array([by_dir[0] / h2d_bps, by_dir[1] / d2h_bps, 0.0])
@@ -333,37 +384,6 @@ def _measured_rates(cur: dict, prev: dict, kind: np.ndarray,
     return np.where(kind == int(SLOKind.IOPS), meas_iops, meas_gbps)
 
 
-def _fleet_algorithm1(runtimes: Sequence[ArcusRuntime],
-                      flowsets: Sequence[FlowSet], host: dict,
-                      prev: dict | None, cfg: SimConfig, t0_ticks: int,
-                      reports: list[list[WindowReport]]) -> dict:
-    """One fleet-wide Algorithm 1 pass between engine windows.
-
-    Measurement runs vectorized over the whole fleet (one ``[B, n_max]``
-    ``_measured_rates`` slab); the per-flow violation/ReAdjustPattern body
-    is the exact serial code path (``ArcusRuntime._window_pass``), so
-    fleet decisions are the serial decisions by construction."""
-    cur = _fleet_counters(host)
-    if prev is None:
-        prev = {k: np.zeros_like(v) for k, v in cur.items()}
-    window_s = cfg.seconds
-    t_end_s = (t0_ticks + cfg.n_ticks) * cfg.tick_cycles / cfg.clock_hz
-    B, n_max = cur["c_done_msgs"].shape
-    kind = np.full((B, n_max), -1, np.int32)
-    for b, rt in enumerate(runtimes):
-        for i, fid in enumerate(sorted(rt.table)):
-            kind[b, i] = int(rt.table[fid].spec.slo.kind)
-    measured = _measured_rates(cur, prev, kind, window_s)
-    for b, rt in enumerate(runtimes):
-        n_b = flowsets[b].n
-        cur_b = {k: v[b, :n_b] for k, v in cur.items()}
-        prev_b = {k: v[b, :n_b] for k, v in prev.items()}
-        reports[b].append(rt._window_pass(cur_b, prev_b, window_s, t_end_s,
-                                          measured[b]))
-        rt._prev_counters = cur_b
-    return cur
-
-
 def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
                       total_ticks: int, window_ticks: int,
                       tick_cycles: int = 8,
@@ -374,146 +394,40 @@ def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,
                       | dict[int, float] | None = None,
                       sim_kwargs: dict[str, Any] | None = None,
                       _force_rebuild: bool = False):
-    """Run B client servers' managed dataplanes as ONE compiled program.
+    """Deprecated shim — use ``FleetController(runtimes).run(...)``.
 
-    The serial ``ArcusRuntime.run_managed`` drives one dataplane per call;
-    this lifts the identical window loop across a *fleet*: per-server
-    FlowSets (different flow counts allowed), accelerator tables (different
-    accelerator counts allowed), arrival traces and TBState registers stack
-    along a leading fleet axis into ``engine.run_window_batch``, and every
-    window's register writes resume the same donated batched carry.  All
-    servers must share ``clock_hz`` and the structural SimConfig (windows,
-    queue depths) — that shared signature is exactly what makes the whole
-    heterogeneous fleet one compiled engine entry.
-
-    Between windows the Algorithm 1 pass (measurement, violation check,
-    token-bucket re-provisioning, path selection) runs fleet-vectorized
-    (see ``_fleet_algorithm1``).  A trailing partial window runs as one
-    final short window, exactly like the serial path.  Register re-packs
-    and FlowSet rebuilds happen per server only after a window that
-    reconfigured that server; a window after which NO server changed
-    resumes the donated carry without any register rewrite at all.
-
-    Counters, WindowReports and the runtimes' post-run control state are
-    bitwise-equal to B serial ``run_managed(seed=seeds[b], ...)`` calls.
-
-    Returns ``(results, reports)``: one last-window ``SimResult`` (with the
-    full completion-history ring) and one ``list[WindowReport]`` per
-    server."""
-    B = len(runtimes)
-    if B == 0:
-        return [], []
-    clock_hz = runtimes[0].clock_hz
-    if any(rt.clock_hz != clock_hz for rt in runtimes):
-        raise ValueError("fleet servers must share clock_hz")
-    if any(not rt.table for rt in runtimes):
-        raise ValueError("every fleet server needs at least one "
-                         "registered flow")
-    seeds_l = list(seeds) if seeds is not None else [0] * B
-    refs_l = (list(load_ref_gbps)
-              if isinstance(load_ref_gbps, (list, tuple))
-              else [load_ref_gbps] * B)
-    if not (len(seeds_l) == B and len(refs_l) == B):
-        raise ValueError("seeds / load_ref_gbps must have one entry "
-                         "per server")
-    sim_kw = dict(sim_kwargs or {})
-    sim_kw.setdefault("clock_hz", clock_hz)   # see run_managed
-    cfg = SimConfig(n_ticks=window_ticks, tick_cycles=tick_cycles,
-                    shaping=SHAPING_HW, arbiter=ARB_RR, **sim_kw)
-    full_cfg = dataclasses.replace(cfg, n_ticks=total_ticks)
-    flowsets = [rt._flowset() for rt in runtimes]
-    atabs = [AccelTable.build(rt.accel_specs, rt.clock_hz)
-             for rt in runtimes]
-    links = [rt.link for rt in runtimes]
-    if arrivals is None:
-        arrivals = [gen_arrivals(flowsets[b], full_cfg, seed=seeds_l[b],
-                                 load_ref_gbps=refs_l[b])
-                    for b in range(B)]
-    # one host->device upload of the stacked full-horizon traces; windows
-    # then pass the same committed buffers
-    arr_t, arr_sz = (jnp.asarray(a) for a in stack_arrivals(list(arrivals)))
-    n_full, rem = divmod(total_ticks, window_ticks)
-    windows = [(w * window_ticks, cfg) for w in range(n_full)]
-    if rem:
-        windows.append((n_full * window_ticks,
-                        dataclasses.replace(cfg, n_ticks=rem)))
-    carry = None
-    prev = None
-    reports: list[list[WindowReport]] = [[] for _ in range(B)]
-    for rt in runtimes:
-        rt._prev_counters = None
-    # per-server re-pack / rebuild only when that server's previous window
-    # actually committed a register write or path change; when NO server
-    # did, the engine resumes the carry without any register rewrite at
-    # all (bitwise no-op either way: unchanged registers rewrite their own
-    # values, and refills clamp tokens at bkt_size inside the engine)
-    tbss: list = [None] * B
-    dirty = [False] * B            # the flowsets built above are fresh
-    for t0, wcfg in windows:
-        for b, rt in enumerate(runtimes):
-            if tbss[b] is None or dirty[b]:
-                tbss[b] = tb.pack([rt.table[f].params
-                                   for f in sorted(rt.table)])
-                if dirty[b]:
-                    flowsets[b] = rt._flowset()
-        writes = tbss if (carry is None or any(dirty)
-                          or _force_rebuild) else None
-        carry = engine.run_window_batch(flowsets, atabs, links, wcfg,
-                                        writes, arr_t, arr_sz, t0_ticks=t0,
-                                        carry=carry)
-        host = jax.device_get({k: carry[k] for k in _FLEET_POLL_KEYS})
-        prev = _fleet_algorithm1(runtimes, flowsets, host, prev, wcfg, t0,
-                                 reports)
-        dirty = [_force_rebuild or bool(reports[b][-1].reconfigured
-                                        or reports[b][-1].path_changes)
-                 for b in range(B)]
-    host = jax.device_get({k: carry[k] for k in sim._RESULT_KEYS})
-    t0_last, wcfg_last = windows[-1]
-    results = []
-    for b in range(B):
-        el = {k: v[b] for k, v in host.items()}
-        for k in sim._PER_FLOW_KEYS:
-            el[k] = el[k][:flowsets[b].n]
-        results.append(sim._collect_result(el, wcfg_last, t0_last))
-    return results, reports
+    Runs B client servers' managed dataplanes as ONE compiled program via
+    the lifecycle controller's window loop (static tenant set: no churn
+    events).  Counters, WindowReports and post-run control state are
+    bitwise-equal to B serial ``run_managed(seed=seeds[b], ...)`` calls —
+    exactly the contract this entry point always had; the controller's
+    event-free path IS this code path now."""
+    warnings.warn(
+        "runtime.run_managed_batch is deprecated; use "
+        "repro.core.controller.FleetController(runtimes).run(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.controller import FleetController
+    return FleetController(runtimes).run(
+        total_ticks=total_ticks, window_ticks=window_ticks,
+        tick_cycles=tick_cycles, seeds=seeds, arrivals=arrivals,
+        load_ref_gbps=load_ref_gbps, sim_kwargs=sim_kwargs,
+        _force_rebuild=_force_rebuild)
 
 
 def register_fleet(runtimes: Sequence[ArcusRuntime],
                    fleet_specs: Sequence[Sequence[FlowSpec]]
                    ) -> list[list[bool]]:
-    """Register per-server FlowSpec lists across a fleet, batching the
-    admission-control profiling.
+    """Deprecated shim — use ``FleetController(runtimes).admit_fleet``.
 
-    Round r considers the r-th spec of every server at once: each server's
-    would-be CapacityPlanning context (its accepted peers on the target
-    accelerator plus the candidate) is profiled through
-    ``profile_contexts_multi`` — one compiled engine call per round instead
-    of one serial profiling simulation per (server, flow).  The subsequent
-    ``ArcusRuntime.register`` calls then hit the warmed ProfileTable
-    caches, so accept/reject decisions are identical to serial
-    registration.  Returns per-server accept/reject lists.
-
-    An empty per-server list is valid (that server registers nothing);
-    a ``fleet_specs``/``runtimes`` length mismatch is rejected before any
-    profiling or registration starts."""
-    if len(fleet_specs) != len(runtimes):
-        raise ValueError(
-            f"fleet_specs must have one spec list per server "
-            f"(got {len(fleet_specs)} lists for {len(runtimes)} servers)")
-    results: list[list[bool]] = [[] for _ in runtimes]
-    rounds = max((len(s) for s in fleet_specs), default=0)
-    for r in range(rounds):
-        jobs = []
-        for b, rt in enumerate(runtimes):
-            if r >= len(fleet_specs[b]):
-                continue
-            accel, _peers, ctx = rt._admission_context(fleet_specs[b][r])
-            jobs.append((rt.profile, accel, ctx))
-        profile_contexts_multi(jobs)
-        for b, rt in enumerate(runtimes):
-            if r < len(fleet_specs[b]):
-                results[b].append(rt.register(fleet_specs[b][r]))
-    return results
+    Registers per-server FlowSpec lists across a fleet, batching each
+    admission round's CapacityPlanning profiling into one compiled engine
+    call; accept/reject decisions are identical to serial registration."""
+    warnings.warn(
+        "runtime.register_fleet is deprecated; use "
+        "repro.core.controller.FleetController(runtimes).admit_fleet(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.controller import FleetController
+    return FleetController(runtimes).admit_fleet(fleet_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -537,86 +451,26 @@ def place_fleet(runtimes: Sequence[ArcusRuntime],
                 specs: Sequence[FlowSpec], *,
                 policy: placement.PlacementPolicy | None = None,
                 pinned: Sequence[int | None] | None = None,
-                accel_names: Sequence[str | None] | None = None
+                accel_names: Sequence[str | None] | None = None,
+                score_cache: "placement.ScoreCache | None" = None
                 ) -> list[placement.Placement]:
-    """Fleet-level admission placement (the CapacityPlanning admission of
-    Algorithm 1, shopped across every client server).
+    """Deprecated shim — use ``FleetController(runtimes).place(...)``.
 
-    Tenants are placed one admission round each, in order.  A round
-    enumerates every compatible (server, accelerator) landing option —
-    all servers, or only ``pinned[i]`` when given; the accelerator
-    matching ``accel_names[i]`` on each server, or the spec's positional
-    ``accel_id`` when no name is given — and profiles ALL their would-be
-    Capacity(t, X, N) contexts through ONE
-    ``profiler.profile_contexts_multi`` engine call (B servers x
-    candidate contexts, ragged flow and accel counts).  The policy then
-    picks among the profiled candidates (``placement.FirstFit`` /
-    ``BestFit`` / ``SLOAware``); the winner is registered on its server
-    via the ordinary ``ArcusRuntime.register`` path (a warmed-cache hit,
-    so placement can never admit what per-server admission would
-    reject).  A tenant is rejected only when NO server fits.
-
-    Parity contract: with ``policy=FirstFit()`` and every spec pinned to
-    its original server this reproduces ``register_fleet``'s
-    accept/reject decisions exactly — fleet placement strictly widens
-    per-server admission, never changes it.
-
-    Returns one ``placement.Placement`` per input spec."""
-    policy = policy or placement.FirstFit()
-    B = len(runtimes)
-    specs = list(specs)
-    pins = list(pinned) if pinned is not None else [None] * len(specs)
-    names = (list(accel_names) if accel_names is not None
-             else [None] * len(specs))
-    if not (len(pins) == len(specs) and len(names) == len(specs)):
-        raise ValueError(
-            "pinned / accel_names must have one entry per spec")
-    if any(p is not None and not 0 <= p < B for p in pins):
-        raise ValueError("pinned server index out of range")
-    out: list[placement.Placement] = []
-    for spec, pin, name in zip(specs, pins, names):
-        meta = []
-        for b in (range(B) if pin is None else [pin]):
-            rt = runtimes[b]
-            for a in _compatible_accels(rt, spec, name):
-                cand_spec = dataclasses.replace(spec, accel_id=a)
-                meta.append((b, a, cand_spec,
-                             rt._admission_context(cand_spec)))
-        if meta:
-            # ONE batched engine call profiles the whole round's
-            # cross-server candidate set (cache hits simulate nothing)
-            profile_contexts_multi([(runtimes[b].profile, ctx[0], ctx[2])
-                                    for b, _a, _s, ctx in meta])
-        cands = []
-        for b, a, cand_spec, ctx in meta:
-            ok, entry, slo, margin = runtimes[b]._admission_check(
-                cand_spec, ctx)
-            cands.append(placement.Candidate(
-                server=b, accel_id=a, spec=cand_spec, entry=entry,
-                slo_gbps=tuple(slo), feasible=ok, margin=margin,
-                residual=entry.residual_gbps(slo),
-                server_key=placement.server_key(runtimes[b])))
-        chosen = policy.select(cands)
-        if chosen is not None and not chosen.feasible:
-            raise ValueError(
-                f"policy {policy.name!r} selected an infeasible candidate "
-                f"(server {chosen.server}, accel {chosen.accel_id}) — "
-                "select() must return a feasible candidate or None")
-        accepted = False
-        if chosen is not None:
-            accepted = runtimes[chosen.server].register(chosen.spec)
-            if not accepted:
-                # feasibility came from the same cached entry register()
-                # re-reads, so a feasible candidate can only bounce if
-                # register() drifts from _admission_check
-                raise RuntimeError(
-                    f"server {chosen.server} rejected a candidate scored "
-                    "feasible — register() and _admission_check diverged")
-        out.append(placement.Placement(
-            spec=spec,
-            server=None if chosen is None else chosen.server,
-            accel_id=None if chosen is None else chosen.accel_id,
-            accepted=accepted,
-            n_candidates=len(cands),
-            n_feasible=sum(c.feasible for c in cands)))
-    return out
+    Fleet-level admission placement: one admission round per tenant, the
+    round's whole cross-server candidate set profiled through ONE batched
+    ``profile_contexts_multi`` engine call, the winner registered via the
+    ordinary per-server path.  Pinned first-fit reproduces
+    ``register_fleet`` decisions exactly (the parity contract).  The
+    controller threads a ``placement.ScoreCache`` through the rounds, so
+    servers untouched since the previous round reuse their scored margins
+    instead of being re-scored from scratch; pass ``score_cache`` to
+    share one across calls."""
+    warnings.warn(
+        "runtime.place_fleet is deprecated; use "
+        "repro.core.controller.FleetController(runtimes).place(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.controller import FleetController
+    return FleetController(runtimes,
+                           policy=policy or placement.FirstFit()).place(
+        specs, pinned=pinned, accel_names=accel_names,
+        score_cache=score_cache)
