@@ -31,7 +31,14 @@ perf trajectory artifact CI uploads for every PR:
     the whole timeline must still run as ONE compiled engine entry, and
     the cross-server reference-flow deviation must stay within 0.5
     percentage points of the baseline (and on the same side of the
-    paper's 1% target).
+    paper's 1% target);
+  * (when ``--pr-contention``/``--baseline-contention`` are given) the
+    multi-resource contention gate: per-arm admission decisions on the
+    mixed B=8 fleet must match the committed baseline, resource-vector
+    scoring must keep admitting strictly more SLO-friendly tenants than
+    the memory-blind control plane, the vector placement's memory-axis
+    utilization variance must stay at or below the memory-blind one,
+    and the R=1 degenerate bitwise gate must have held.
 
 Usage:
     python -m benchmarks.check_regression \
@@ -151,6 +158,51 @@ def summarize_churn(pr: dict, baseline: dict) -> dict:
     }
 
 
+_CONTENTION_ARMS = ("vector", "axis0", "mem_blind")
+
+
+def summarize_contention(pr: dict, baseline: dict) -> dict:
+    """Multi-resource contention gate over the fixed B=8 mixed fleet:
+    per-arm admission counts and landing decisions are deterministic
+    (profiling horizons are mode-independent) — any drift means a PR
+    changed vector admission behavior; the SLO-friendly gain of vector
+    scoring over the memory-blind control plane must stay strictly
+    positive, the cross-resource (memory-axis) utilization variance of
+    the vector placement must stay at or below the memory-blind one and
+    within 0.05 of the committed baseline, and the R=1 degenerate
+    bitwise gate must have held."""
+    b8, base8 = pr["B8"], baseline["B8"]
+    drift = {}
+    for arm in _CONTENTION_ARMS:
+        if b8[arm]["admitted"] != base8[arm]["admitted"]:
+            drift[arm] = {"admitted": [b8[arm]["admitted"],
+                                       base8[arm]["admitted"]]}
+        elif b8[arm]["decisions"] != base8[arm]["decisions"]:
+            drift[arm] = {"decisions": [b8[arm]["decisions"],
+                                        base8[arm]["decisions"]]}
+        elif b8[arm]["slo_friendly"] != base8[arm]["slo_friendly"]:
+            drift[arm] = {"slo_friendly": [b8[arm]["slo_friendly"],
+                                           base8[arm]["slo_friendly"]]}
+    gain = (b8["vector"]["slo_friendly"]
+            - b8["mem_blind"]["slo_friendly"])
+    var = {arm: b8[arm]["mem_util_var"] for arm in _CONTENTION_ARMS}
+    var_ok = (var["vector"] <= var["mem_blind"]
+              and abs(var["vector"] - base8["vector"]["mem_util_var"])
+              <= 0.05)
+    return {
+        "admitted_B8": {arm: b8[arm]["admitted"]
+                        for arm in _CONTENTION_ARMS},
+        "slo_friendly_B8": {arm: b8[arm]["slo_friendly"]
+                            for arm in _CONTENTION_ARMS},
+        "gain_slo_friendly_vector_vs_mem_blind": gain,
+        "mem_util_var": var,
+        "degenerate_bitwise": bool(b8["degenerate_bitwise"]),
+        "decision_drift_vs_baseline": drift,
+        "ok": (gain > 0 and var_ok and not drift
+               and bool(b8["degenerate_bitwise"])),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pr", required=True,
@@ -165,6 +217,10 @@ def main() -> None:
                     help="churn.json from this PR's smoke run")
     ap.add_argument("--baseline-churn", default=None,
                     help="committed benchmarks/results/churn.json")
+    ap.add_argument("--pr-contention", default=None,
+                    help="contention.json from this PR's smoke run")
+    ap.add_argument("--baseline-contention", default=None,
+                    help="committed benchmarks/results/contention.json")
     ap.add_argument("--out", default="BENCH_pr.json")
     ap.add_argument("--max-slowdown", type=float, default=2.0)
     args = ap.parse_args()
@@ -180,6 +236,10 @@ def main() -> None:
     if bool(args.pr_churn) != bool(args.baseline_churn):
         ap.error("--pr-churn and --baseline-churn must be given together "
                  "(one alone would silently skip the churn gate)")
+    if bool(args.pr_contention) != bool(args.baseline_contention):
+        ap.error("--pr-contention and --baseline-contention must be given "
+                 "together (one alone would silently skip the contention "
+                 "gate)")
     out = summarize(pr, baseline, args.max_slowdown)
     if args.pr_placement and args.baseline_placement:
         with open(args.pr_placement) as f:
@@ -194,11 +254,18 @@ def main() -> None:
         with open(args.baseline_churn) as f:
             base_churn = json.load(f)
         out["churn"] = summarize_churn(pr_churn, base_churn)
+    if args.pr_contention and args.baseline_contention:
+        with open(args.pr_contention) as f:
+            pr_cont = json.load(f)
+        with open(args.baseline_contention) as f:
+            base_cont = json.load(f)
+        out["contention"] = summarize_contention(pr_cont, base_cont)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))
     ok = (out["ok"] and out.get("placement", {}).get("ok", True)
-          and out.get("churn", {}).get("ok", True))
+          and out.get("churn", {}).get("ok", True)
+          and out.get("contention", {}).get("ok", True))
     if not out["ok"]:
         print(f"FAIL: cached rerun {out['cached_rerun_us_per_tick']:.1f} "
               f"us/tick is {out['slowdown_vs_baseline_x']:.2f}x the "
@@ -211,6 +278,11 @@ def main() -> None:
         print("FAIL: churn gate — lifecycle counts/decisions drifted, "
               "variance moved, or the timeline stopped being one "
               f"compiled engine entry: {out['churn']}", file=sys.stderr)
+    if not out.get("contention", {}).get("ok", True):
+        print("FAIL: contention gate — vector admission decisions "
+              "drifted, the SLO-friendly gain over the memory-blind "
+              "control plane was lost, or the cross-resource variance "
+              f"moved: {out['contention']}", file=sys.stderr)
     if not ok:
         sys.exit(1)
     print(f"OK: cached rerun within {args.max_slowdown}x of baseline "
@@ -219,7 +291,11 @@ def main() -> None:
              "; placement decisions stable, slo_aware admission gain "
              f"+{out['placement']['gain_slo_aware_vs_per_server']}")
           + ("" if "churn" not in out else
-             "; churn lifecycle decisions stable"))
+             "; churn lifecycle decisions stable")
+          + ("" if "contention" not in out else
+             "; contention SLO-friendly gain "
+             f"+{out['contention']['gain_slo_friendly_vector_vs_mem_blind']}"
+             ))
 
 
 if __name__ == "__main__":

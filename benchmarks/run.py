@@ -21,6 +21,7 @@ MODULES = [
     "fleet_slo",                 # fleet-scale batched control plane
     "placement",                 # fleet admission placement policies
     "churn",                     # tenant-lifecycle churn timelines
+    "contention",                # multi-resource vector admission
     "table2_shaping_accuracy",   # Table 2
     "fig3_provisioning",         # Fig. 3 / Table 1
     "fig6_throughput_cdf",       # Fig. 6 + Sec 5.2 latency

@@ -42,6 +42,24 @@ class AcceleratorSpec:
     # the curve; log-space interpolated.  Used for devices whose cost is
     # operation- rather than bandwidth-dominated (e.g. SSD reads vs writes).
     service_us_at: tuple = ()
+    # per-resource demand overrides: ((resource_name, per_ingress_byte,
+    # per_egress_byte), ...).  Axes without an override charge 1.0 per byte
+    # in each direction — combined with the device's egress curve that
+    # already makes R_EXPAND devices egress/memory-heavy (2.5 egress bytes
+    # per ingress byte on 'decompress') and fixed-egress SHA-style devices
+    # ingress-heavy (64B digests).  Explicit overrides model devices whose
+    # shared-resource footprint is decoupled from their message bytes
+    # (e.g. a compute-bound systolic engine barely touching memory bw).
+    res_demand: tuple = ()
+
+    # ------------------------------------------------------------------
+    def resource_demand(self, resource_name: str) -> tuple[float, float]:
+        """(per-ingress-byte, per-egress-byte) demand coefficients of this
+        device on the named resource axis (see ``res_demand``)."""
+        for nm, ic, ec in self.res_demand:
+            if nm == resource_name:
+                return float(ic), float(ec)
+        return 1.0, 1.0
 
     # ------------------------------------------------------------------
     def throughput_gbps(self, msg_bytes: np.ndarray) -> np.ndarray:
@@ -158,6 +176,13 @@ class AccelTable:
     egress_bytes: np.ndarray     # [A, GRID_N] float32
     parallelism: np.ndarray      # [A] int32
     names: Sequence[str] = dataclasses.field(default_factory=list)
+    # host-side source specs (resource-demand derivation); hand-built or
+    # padded tables may carry fewer specs than rows — spec_of() guards.
+    specs: Sequence[AcceleratorSpec] = dataclasses.field(default_factory=list)
+
+    def spec_of(self, accel_id: int) -> AcceleratorSpec | None:
+        return (self.specs[accel_id]
+                if 0 <= accel_id < len(self.specs) else None)
 
     @staticmethod
     def build(specs: Sequence[AcceleratorSpec], clock_hz: float = 250e6
@@ -171,6 +196,7 @@ class AccelTable:
             egress_bytes=eg.astype(np.float32),
             parallelism=np.array([s.parallelism for s in specs], np.int32),
             names=[s.name for s in specs],
+            specs=list(specs),
         )
 
 

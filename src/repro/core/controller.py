@@ -255,13 +255,14 @@ class FleetController:
             if cached is not None:
                 cands.append(cached)
                 continue
-            ok, entry, slo, margin = self.runtimes[b]._admission_check(
-                cand_spec, ctx)
+            ok, entry, slo, margin, margin_res = \
+                self.runtimes[b]._admission_check(cand_spec, ctx)
             cand = placement.Candidate(
                 server=b, accel_id=a, spec=cand_spec, entry=entry,
                 slo_gbps=tuple(slo), feasible=ok, margin=margin,
                 residual=entry.residual_gbps(slo),
-                server_key=placement.server_key(self.runtimes[b]))
+                server_key=placement.server_key(self.runtimes[b]),
+                margin_res=margin_res)
             if cache is not None:
                 cache.store(self.runtimes[b], b, a, cand_spec, cand)
             cands.append(cand)

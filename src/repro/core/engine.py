@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Sequence
 
 import jax
@@ -117,6 +118,13 @@ class SimConfig:
     # and falls back to the sequential loop whenever a lane could chain
     # back-to-back messages within one tick.
     stage_fast: bool = True
+    # service-vectorization width threshold: the one-shot service stage
+    # engages when A * k_srv >= service_vec_min (8 was measured on XLA-CPU;
+    # other backends want other knees).  Structural — part of the compile
+    # key, NOT traced.  Default comes from $REPRO_SERVICE_VEC_MIN.
+    service_vec_min: int = dataclasses.field(
+        default_factory=lambda: int(
+            os.environ.get("REPRO_SERVICE_VEC_MIN", "8")))
 
     @property
     def seconds(self) -> float:
@@ -142,8 +150,8 @@ def _static_cfg(cfg: SimConfig) -> SimConfig:
 
 
 def init_carry(flows: FlowSet, accels: AccelTable, cfg: SimConfig,
-               tb_state: tb.TBState, *, n_flows: int | None = None
-               ) -> dict[str, Any]:
+               tb_state: tb.TBState, *, n_flows: int | None = None,
+               n_res: int = 0) -> dict[str, Any]:
     N, A = (n_flows or flows.n), accels.n
     lanes_busy = np.zeros((A, cfg.lmax), np.float32)
     for a in range(A):
@@ -163,6 +171,9 @@ def init_carry(flows: FlowSet, accels: AccelTable, cfg: SimConfig,
         vft=jnp.zeros((N,), jnp.float32),
         # link / credits
         lres=jnp.zeros((2,), jnp.float32),
+        # extra resource axes (token-bucket residue: unused budget up to
+        # each axis' burst_bytes, or the serialization debt when negative)
+        res_res=jnp.zeros((n_res,), jnp.float32),
         credits_used=jnp.zeros((), jnp.int32),
         # accelerator queues + lanes
         aq_sz=jnp.zeros((A, cfg.aq_len), jnp.int32),
@@ -325,6 +336,9 @@ def pad_accel_table(tab: AccelTable, a_max: int) -> AccelTable:
         parallelism=np.concatenate(
             [tab.parallelism, np.zeros(pad, np.int32)]).astype(np.int32),
         names=list(tab.names) + ["__pad__"] * pad,
+        # padded rows carry no spec: spec_of() guards, and no flow ever
+        # routes to them anyway
+        specs=list(tab.specs),
     )
 
 
@@ -350,6 +364,49 @@ def _flow_args(flows: FlowSet, n_max: int) -> dict[str, np.ndarray]:
         fl_w=pad(np.maximum(flows.weight, 1e-3), 1.0, np.float32),
         fl_mask=pad(np.ones(n, bool), False, bool),
     )
+
+
+def _resource_tables(flows: FlowSet, accels: AccelTable, link: LinkSpec,
+                     n_max: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-flow demand coefficients on the extra resource axes.
+
+    Returns ``(w_in, w_eg)``, each ``[R-1, n_max]`` float32: bytes charged
+    on axis r per ingress byte granted / per egress byte popped for flow i.
+    Resolution order: a flow's own ``res_demand`` hint, else its
+    accelerator's ``AcceleratorSpec.res_demand``, else 1.0/1.0 (every byte
+    crosses the axis).  ``fabric_only`` axes charge nothing for off-fabric
+    (dir == 2) stage directions.  Padded flow lanes keep 0 coefficients —
+    they are never granted, so the value is inert either way."""
+    rspecs = getattr(link, "resources", ())
+    R = len(rspecs)
+    w_in = np.zeros((R, n_max), np.float32)
+    w_eg = np.zeros((R, n_max), np.float32)
+    specs = getattr(flows, "specs", ())
+    for r, rs in enumerate(rspecs):
+        for i in range(flows.n):
+            sp = specs[i] if i < len(specs) else None
+            ic = ec = None
+            if sp is not None:
+                for nm, a, b in getattr(sp, "res_demand", ()):
+                    if nm == rs.name:
+                        ic, ec = float(a), float(b)
+                        break
+            if ic is None:
+                aspec = (accels.spec_of(int(flows.accel_id[i]))
+                         if hasattr(accels, "spec_of") else None)
+                ic, ec = (aspec.resource_demand(rs.name)
+                          if aspec is not None else (1.0, 1.0))
+            if rs.fabric_only:
+                if int(flows.ingress_dir[i]) == 2:
+                    ic = 0.0
+                if int(flows.egress_dir[i]) == 2:
+                    ec = 0.0
+            # clamp: negative demand would refill a bucket mid-tick,
+            # breaking the eligibility monotonicity the fast grant path
+            # relies on
+            w_in[r, i] = max(ic, 0.0)
+            w_eg[r, i] = max(ec, 0.0)
+    return w_in, w_eg
 
 
 # ---------------------------------------------------------------------------
@@ -405,7 +462,14 @@ def _pack_args(flows: FlowSet, accels: AccelTable, link: LinkSpec,
         sw_delay=jnp.asarray(cfg.sw_host_delay_cycles, jnp.float32),
         sw_jit=jnp.asarray(cfg.sw_jitter_cycles, jnp.float32),
         stall=jnp.asarray(_window_stall(stall_mask, cfg, t0_ticks), bool),
+        # extra contended resource axes (R-1 of them; empty arrays in the
+        # scalar default, where the whole resource pipeline compiles away)
+        res_cap=jnp.asarray(link.resource_caps_per_cycle(), jnp.float32),
+        res_burst=jnp.asarray(link.resource_burst_bytes(), jnp.float32),
     )
+    w_in, w_eg = _resource_tables(flows, accels, link, flows.n)
+    args["res_w_in"] = jnp.asarray(w_in)
+    args["res_w_eg"] = jnp.asarray(w_eg)
     for k, v in _flow_args(flows, flows.n).items():
         args[k] = jnp.asarray(v)
     return args
@@ -519,9 +583,27 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
 
     # -- 3. per-tick link budgets ------------------------------------
     budget = bpc * cfg.tick_cycles + carry["lres"]  # [2] bytes
+    # extra resource axes (R_res = R-1; 0 in the scalar default).  R_res is
+    # a *static* shape, so every resource op below sits behind a python
+    # `if R_res:` guard — the R=1 compiled graph is structurally identical
+    # to the pre-vector engine, which is what guarantees the bitwise
+    # degenerate contract.  The empty [0] arrays still thread through the
+    # cond/loop state tuples so branch signatures stay consistent.
+    R_res = args["res_cap"].shape[0]
+    res_bud = args["res_cap"] * cfg.tick_cycles + carry["res_res"]
+    res_w_in, res_w_eg = args["res_w_in"], args["res_w_eg"]
+    if R_res:
+        # axes a flow charges in EITHER direction: its grants stall while
+        # any of them is in debt.  Only the grant stage is gated — egress
+        # charges its bytes as additional debt when it pops (gating pops
+        # too would let the earlier grant stage starve egress forever at
+        # saturation); sustainable ingress goodput on a saturated axis is
+        # then cap / (w_in + w_eg * egress_ratio), which is exactly the
+        # demand-coefficient algebra CapacityEntry margins use.
+        res_w_any = (res_w_in > 0.0) | (res_w_eg > 0.0)
 
     # -- 4. shaper + arbiter grants ----------------------------------
-    def grant_inputs(c, budget):
+    def grant_inputs(c, budget, res_bud):
         """Head-of-line state + eligibility + arbiter key per flow."""
         head_sz = c["q_sz"][iota_n, c["q_head"]]
         head_at = c["q_at"][iota_n, c["q_head"]]
@@ -542,6 +624,12 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         bud_ok = bud_f > 0.0
         elig = (have & tok_ok & aq_room & cred_ok & bud_ok & fl_mask
                 & jnp.logical_not(is_stall))
+        if R_res:
+            # a flow stalls while ANY axis it demands is in debt (same
+            # start-when-positive semantics as the link budget above)
+            res_ok = jnp.all((~res_w_any) | (res_bud[:, None] > 0.0),
+                             axis=0)
+            elig = elig & res_ok
 
         # arbiter key (lower = served first), selected by the traced mode
         # word.  Pure RR cycles by lane index modulo the *static* lane
@@ -563,8 +651,8 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         return head_sz, head_at, cost, elig, key
 
     def grant_body(_, st):
-        c, budget = st
-        head_sz, head_at, cost, elig, key = grant_inputs(c, budget)
+        c, budget, res_bud = st
+        head_sz, head_at, cost, elig, key = grant_inputs(c, budget, res_bud)
         g = jnp.argmin(key).astype(jnp.int32)
         ok = elig[g]
 
@@ -582,6 +670,11 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         spend = jnp.where((fl_in_dir[g] != 2) & ok,
                           sz.astype(jnp.float32) + ovh, 0.0)
         budget = budget.at[dir_idx].add(-spend)
+        if R_res:
+            # charge the granted message's ingress demand on every axis
+            # (payload bytes only — the TLP overhead is a link artifact)
+            res_bud = res_bud - jnp.where(
+                ok, res_w_in[:, g] * sz.astype(jnp.float32), 0.0)
         c["credits_used"] = c["credits_used"] + ok.astype(jnp.int32)
         # accel queue push
         a = fl_accel[g]
@@ -606,11 +699,12 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         lo = c["c_adm_b_lo"] + jnp.where(onehot, sz, 0)
         c["c_adm_b_hi"] = c["c_adm_b_hi"] + (lo >> 20)
         c["c_adm_b_lo"] = lo & 0xFFFFF
-        return c, budget
+        return c, budget, res_bud
 
-    def seq_grants(c, budget, *_aux):
-        c, budget = _fori(cfg.k_grant, grant_body, (c, budget))
-        return c, budget
+    def seq_grants(c, budget, res_bud, *_aux):
+        c, budget, res_bud = _fori(cfg.k_grant, grant_body,
+                                   (c, budget, res_bud))
+        return c, budget, res_bud
 
     use_fast = cfg.grant_fast and cfg.k_grant > 1 and N > 1
     if use_fast:
@@ -628,7 +722,8 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         #       message).
         # Any contended (or non-RR) tick falls back to the sequential loop.
         K = min(cfg.k_grant, N)
-        head_sz, head_at, cost, elig, key = grant_inputs(carry, budget)
+        head_sz, head_at, cost, elig, key = grant_inputs(carry, budget,
+                                                         res_bud)
         order = jnp.argsort(key)[:K]             # candidate flows, RR order
         valid = elig[order]                       # eligible prefix
         vi = valid.astype(jnp.int32)
@@ -654,6 +749,17 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         idx_before = lt_i @ vi
         cred_ok = carry["credits_used"] + idx_before < credits
         ok_all = jnp.all(~valid | (bud_ok & aq_ok & cred_ok))
+        if R_res:
+            # cumulative per-axis check: candidate j must see a positive
+            # bucket after the spends of every valid candidate before it
+            # (the sequential loop's mid-tick eligibility re-check)
+            c_any = res_w_any[:, order]                         # [R, K]
+            c_rspend = (res_w_in[:, order]
+                        * jnp.where(valid, csz, 0).astype(jnp.float32))
+            cum_res = c_rspend @ lt_f.T                         # [R, K]
+            res_ok_c = jnp.all(
+                (~c_any) | (res_bud[:, None] - cum_res > 0.0), axis=0)
+            ok_all = ok_all & jnp.all(~valid | res_ok_c)
         n_elig = jnp.sum(elig.astype(jnp.int32))
         regrant_safe = ((n_elig >= cfg.k_grant)
                         | jnp.all(~elig | (carry["q_cnt"] <= 1)))
@@ -667,11 +773,19 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         # batch engines would instead rely on fast==sequential holding to
         # the last float ulp.  Callers who want a leaner batch engine can
         # set SimConfig.grant_fast=False on both sides.
-        def vec_grants(c, budget, order, valid, vi, csz, cat, ccost,
-                       cdir, d01, cacc, spend, cnt_before):
+        def vec_grants(c, budget, res_bud, order, valid, vi, csz, cat,
+                       ccost, cdir, d01, cacc, spend, cnt_before):
             c["tb"] = c["tb"]._replace(
                 tokens=c["tb"].tokens.at[order].add(
                     -jnp.where(valid & shaped, ccost, 0)))
+            if R_res:
+                # subtract in the exact sequential chain order: non-dyadic
+                # demand coefficients make float sums order-sensitive, and
+                # the carried residue must match the sequential loop's
+                r_spend = (res_w_in[:, order]
+                           * jnp.where(valid, csz, 0).astype(jnp.float32))
+                for j in range(K):
+                    res_bud = res_bud - r_spend[:, j]
             c["q_head"] = (c["q_head"]
                            + jnp.zeros((N,), jnp.int32).at[order].add(vi)) \
                 % cfg.qlen
@@ -698,14 +812,14 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
             lo = c["c_adm_b_lo"].at[order].add(jnp.where(valid, csz, 0))
             c["c_adm_b_hi"] = c["c_adm_b_hi"] + (lo >> 20)
             c["c_adm_b_lo"] = lo & 0xFFFFF
-            return c, budget
+            return c, budget, res_bud
 
-        carry, budget = jax.lax.cond(
+        carry, budget, res_bud = jax.lax.cond(
             fast_pred, vec_grants, seq_grants,
-            carry, budget, order, valid, vi, csz, cat, ccost,
+            carry, budget, res_bud, order, valid, vi, csz, cat, ccost,
             cdir, d01, cacc, spend, cnt_before)
     else:
-        carry, budget = seq_grants(carry, budget)
+        carry, budget, res_bud = seq_grants(carry, budget, res_bud)
 
     # -- 5. accelerator service --------------------------------------
     # sequential reference: one accel per iteration, pass-major order
@@ -767,11 +881,12 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         return _fori(A * cfg.k_srv, srv_body, c)
 
     # Vectorized service pays off only once the stage is wide enough:
-    # measured on XLA-CPU, narrow service (A * k_srv < 8) next to the
-    # vectorized egress stage fuses pathologically (3x slower than the
-    # unrolled loop), while wide stages gain 2-4x.  The threshold is
-    # static, so serial and batched runs always take the same path.
-    if cfg.stage_fast and A * cfg.k_srv >= 8:
+    # measured on XLA-CPU, narrow service next to the vectorized egress
+    # stage fuses pathologically (3x slower than the unrolled loop), while
+    # wide stages gain 2-4x.  The knee (8 on XLA-CPU) is backend-dependent:
+    # SimConfig.service_vec_min / $REPRO_SERVICE_VEC_MIN override it.  The
+    # threshold is static, so serial and batched runs share the path.
+    if cfg.stage_fast and A * cfg.k_srv >= cfg.service_vec_min:
         # Prefix-sum slot assignment (the treatment PR 1 gave RR grants):
         # sort each accelerator's lanes by busy-time; the k-th queued
         # message starts on the k-th least-busy lane.  This equals the
@@ -855,7 +970,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
     dirs = jnp.arange(3, dtype=jnp.int32)
 
     def eg_body(_, st):
-        c, budget = st
+        c, budget, res_bud = st
         h = c["eq_head"]                       # [3]
         sz = c["eq_sz"][dirs, h]
         isz = c["eq_isz"][dirs, h]
@@ -871,6 +986,12 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         c["eq_cnt"] = c["eq_cnt"] - pop
         spend = jnp.where(pop[:2], sz[:2].astype(jnp.float32) + ovh, 0.0)
         budget = budget - spend
+        if R_res:
+            # ungated debt charge — see res_w_any above; the three
+            # directions' spends of one iteration subtract together
+            res_bud = res_bud - (
+                res_w_eg[:, fl] * jnp.where(pop, sz, 0)
+                .astype(jnp.float32)[None, :]).sum(1)
         c["credits_used"] = c["credits_used"] - pop.sum().astype(jnp.int32)
         # completion = transfer start + own serialization delay
         ser = jnp.where(dirs < 2,
@@ -896,7 +1017,7 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         c["c_done_b_lo"] = lo & 0xFFFFF
         c["c_lat_sum"] = c["c_lat_sum"].at[fl].add(
             jnp.where(pop, lat.astype(jnp.float32), 0.0))
-        return c, budget
+        return c, budget, res_bud
 
     if cfg.stage_fast:
         # Vectorized egress: gather the next k_eg ring entries of every
@@ -919,15 +1040,22 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
                               e_sz.astype(jnp.float32) + ovh, 0.0)
         pops, prev = [], jnp.ones((3,), bool)
         b_run = budget
+        r_run = res_bud
         for j in range(Ke):
             bud_ok = jnp.concatenate(
                 [b_run, jnp.asarray([3e38], jnp.float32)]) > 0.0
             pop_j = prev & e_have[:, j] & e_ready[:, j] & bud_ok
             b_run = b_run - jnp.where(pop_j[:2], spend_mat[:2, j], 0.0)
+            if R_res:
+                r_run = r_run - (
+                    res_w_eg[:, e_fl[:, j]]
+                    * jnp.where(pop_j, e_sz[:, j], 0)
+                    .astype(jnp.float32)[None, :]).sum(1)
             pops.append(pop_j)
             prev = pop_j
         pop = jnp.stack(pops, axis=1)                       # [3, Ke]
         budget = b_run
+        res_bud = r_run
         npop = pop.astype(jnp.int32).sum(1)
         carry["eq_head"] = (carry["eq_head"] + npop) % cfg.eq_len
         carry["eq_cnt"] = carry["eq_cnt"] - npop
@@ -957,11 +1085,17 @@ def _tick(cfg: SimConfig, args: dict, carry: dict, t):
         carry["c_lat_sum"] = carry["c_lat_sum"].at[flat(e_fl)].add(
             jnp.where(popf, flat(lat).astype(jnp.float32), 0.0))
     else:
-        carry, budget = _fori(cfg.k_eg, eg_body, (carry, budget))
+        carry, budget, res_bud = _fori(cfg.k_eg, eg_body,
+                                       (carry, budget, res_bud))
 
     # Positive leftover budget is lost (a link cannot save idle time);
     # negative budget (serialization debt of in-flight messages) carries.
     carry["lres"] = jnp.minimum(budget, 0.0)
+    if R_res:
+        # each axis is a token bucket: unused budget carries up to the
+        # axis' burst depth (burst 0 reproduces the link's lose-idle-time
+        # semantics); debt always carries
+        carry["res_res"] = jnp.minimum(res_bud, args["res_burst"])
     return carry
 
 
@@ -1026,7 +1160,8 @@ def run_window(flows: FlowSet, accels: AccelTable, link: LinkSpec,
     args = _pack_args(flows, accels, link, cfg, arr_t, arr_sz, stall_mask,
                       t0_ticks)
     if carry is None:
-        carry = init_carry(flows, accels, cfg, tb_state)
+        carry = init_carry(flows, accels, cfg, tb_state,
+                           n_res=len(getattr(link, "resources", ())))
     else:
         carry = reconfigure_carry(carry, tb_state)
     key = ("single", _static_cfg(cfg), _args_sig(args))
@@ -1111,6 +1246,14 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     a_max = max(a.n for a in accels_l)
     padded_l = [pad_accel_table(a, a_max) for a in accels_l]
 
+    n_res = len(getattr(links_l[0], "resources", ()))
+    if any(len(getattr(l, "resources", ())) != n_res
+           for l in links_l[1:]):
+        raise ValueError(
+            "batched LinkSpecs must all carry the same number of resource "
+            "axes (resource tables are a shared traced shape; a huge-"
+            "capacity axis is inert if an element needs fewer)")
+
     n_max = max(f.n for f in flows_l)
     if arr_t.shape[1] != n_max:
         raise ValueError(
@@ -1180,6 +1323,24 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
             [l.msg_overhead_bytes for l in links_l], jnp.float32)
         args["credits"] = jnp.asarray([l.credits for l in links_l], jnp.int32)
         axes["bpc"] = axes["ovh"] = axes["credits"] = 0
+        if n_res:
+            args["res_cap"] = jnp.asarray(
+                np.stack([l.resource_caps_per_cycle() for l in links_l]),
+                jnp.float32)
+            args["res_burst"] = jnp.asarray(
+                np.stack([l.resource_burst_bytes() for l in links_l]),
+                jnp.float32)
+            axes["res_cap"] = axes["res_burst"] = 0
+    if n_res and (flows_batched or accel_batched or link_batched):
+        # demand coefficients depend on flows x accels x link axes; batch
+        # the [R-1, n_max] tables whenever any of the three is per-element
+        tabs = [_resource_tables(flows_l[b], padded_l[b], links_l[b], n_max)
+                for b in range(B)]
+        args["res_w_in"] = jnp.asarray(np.stack([t[0] for t in tabs]),
+                                       jnp.float32)
+        args["res_w_eg"] = jnp.asarray(np.stack([t[1] for t in tabs]),
+                                       jnp.float32)
+        axes["res_w_in"] = axes["res_w_eg"] = 0
     if stall_np is not None:
         args["stall"] = jnp.asarray(
             _window_stall(stall_np, cfg0, t0_ticks), bool)
@@ -1188,7 +1349,7 @@ def run_window_batch(flows: FlowSet | Sequence[FlowSet],
     if carry is None:
         tb_padded = [pad_tb_state(tb_states[b], n_max) for b in range(B)]
         carries = [init_carry(flows_l[b], padded_l[b], cfg0, tb_padded[b],
-                              n_flows=n_max)
+                              n_flows=n_max, n_res=n_res)
                    for b in range(B)]
         carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
     elif tb_states is not None:

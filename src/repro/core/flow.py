@@ -124,6 +124,12 @@ class FlowSpec:
     slo: SLO
     priority: int = 0          # higher = more important (PANIC baseline uses this)
     weight: float = 1.0        # WRR/WFQ weight
+    # per-tenant resource-demand hints: ((resource_name, per_ingress_byte,
+    # per_egress_byte), ...) overriding the accelerator's derived demand on
+    # that axis for THIS flow (a tenant that declares its workload is
+    # compute-bound, say).  Hints re-key the flow's profiling contexts; the
+    # empty default keeps every context key bitwise-stable.
+    res_demand: tuple = ()
 
 
 @dataclasses.dataclass

@@ -59,9 +59,13 @@ class Candidate:
     entry: CapacityEntry           # profiled post-admission context
     slo_gbps: tuple[float, ...]    # canonical-order SLO vector (w/ tenant)
     feasible: bool                 # entry.slo_tag(slo_gbps)
-    margin: float                  # entry.slo_margin(slo_gbps)
+    margin: float                  # entry.slo_margin(slo_gbps) — min axis
     residual: float                # entry.residual_gbps(slo_gbps)
     server_key: tuple              # canonical tie-break identity
+    # per-resource-axis margins (entry.slo_margins; axis 0 = link).  Empty
+    # for hand-built candidates — axis-scoring policies fall back to the
+    # scalar margin then.
+    margin_res: tuple = ()
 
 
 @dataclasses.dataclass
@@ -135,15 +139,33 @@ class SLOAware(PlacementPolicy):
     """Largest post-admission ``slo_tag`` margin among feasible
     candidates: the landing spot whose would-be context keeps the most
     normalized headroom to its nearest constraint (aggregate capacity or
-    a per-flow contention ceiling)."""
+    a per-flow contention ceiling).
+
+    By default the score is the *vector* margin — the min over every
+    resource axis — so a bandwidth-bound tenant steers away from a
+    memory-saturated server and vice versa.  ``axis=<r>`` scores one
+    axis' margin only (feasibility stays vector-checked): ``axis=0`` is
+    exactly the pre-vector scalar policy, the comparison baseline
+    ``benchmarks/contention.py`` measures the vector gain against."""
 
     name = "slo_aware"
+
+    def __init__(self, axis: int | None = None):
+        self.axis = axis
+        if axis is not None:
+            self.name = f"slo_aware_axis{axis}"
+
+    def _score(self, c: Candidate) -> float:
+        if self.axis is not None and len(c.margin_res) > self.axis:
+            return c.margin_res[self.axis]
+        return c.margin
 
     def select(self, candidates: list[Candidate]) -> Candidate | None:
         feasible = [c for c in candidates if c.feasible]
         if not feasible:
             return None
-        return min(feasible, key=lambda c: (-c.margin, self._tie_key(c)))
+        return min(feasible,
+                   key=lambda c: (-self._score(c), self._tie_key(c)))
 
 
 POLICIES = {p.name: p for p in (FirstFit, BestFit, SLOAware)}
@@ -156,8 +178,10 @@ def _score_sig(spec: FlowSpec) -> tuple:
     residual, feasibility — is a function of the would-be context, which
     sees only (path, traffic pattern, SLO); flow/vm ids never enter it.
     Keying on this signature lets a homogeneous tenant stream (same
-    shape, different ids) reuse scores round over round."""
-    return (int(spec.path), spec.pattern, spec.slo)
+    shape, different ids) reuse scores round over round.  The
+    resource-demand hint re-keys the would-be context (and its margins),
+    so it is part of the identity."""
+    return (int(spec.path), spec.pattern, spec.slo, spec.res_demand)
 
 
 class ScoreCache:
@@ -197,11 +221,11 @@ class ScoreCache:
                                                   id(runtime)),
                                           runtime.lifecycle_version):
             profiler._PROFILING_STATS["score_hits"] += 1
-            entry, slo, ok, margin, residual, skey = hit[1]
+            entry, slo, ok, margin, residual, skey, margin_res = hit[1]
             return Candidate(server=server, accel_id=accel_id, spec=spec,
                              entry=entry, slo_gbps=slo, feasible=ok,
                              margin=margin, residual=residual,
-                             server_key=skey)
+                             server_key=skey, margin_res=margin_res)
         profiler._PROFILING_STATS["score_misses"] += 1
         return None
 
@@ -211,7 +235,7 @@ class ScoreCache:
             (getattr(runtime, "_uid", id(runtime)),
              runtime.lifecycle_version),
             (c.entry, c.slo_gbps, c.feasible, c.margin, c.residual,
-             c.server_key))
+             c.server_key, c.margin_res))
 
     def clear(self) -> None:
         self._scores.clear()

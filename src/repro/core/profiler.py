@@ -29,14 +29,16 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
+import warnings
 from typing import Sequence
 
 import numpy as np
 
 from repro.core import baselines, token_bucket as tb
 from repro.core.accelerator import AccelTable, AcceleratorSpec
-from repro.core.flow import (SLO, FlowSet, FlowSpec, Path, TrafficPattern)
-from repro.core.interconnect import ARB_RR, LinkSpec
+from repro.core.flow import (PATH_EGRESS_DIR, PATH_INGRESS_DIR, SLO, FlowSet,
+                             FlowSpec, Path, TrafficPattern)
+from repro.core.interconnect import ARB_RR, RES_LINK, LinkSpec
 from repro.core.sim import (SHAPING_NONE, SimConfig, gen_arrivals, simulate,
                             simulate_batch, stack_arrivals)
 
@@ -50,7 +52,9 @@ def canonical_order(flows: list[tuple[Path, int, float]]) -> list[int]:
     """Indices sorting a context into canonical (path, msg bucket, load
     decile) order — the single source of truth for how
     ``CapacityEntry.per_flow_gbps`` (and any positional SLO vector fed to
-    ``slo_tag``) is ordered."""
+    ``slo_tag``) is ordered.  Context tuples may carry a 4th element (a
+    per-tenant resource-demand hint); it does not participate in the sort
+    key, so hinted and unhinted contexts order identically."""
     return sorted(range(len(flows)),
                   key=lambda i: (int(flows[i][0]), msg_bucket(flows[i][1]),
                                  int(round(flows[i][2] * 10))))
@@ -64,18 +68,84 @@ def canonical_context(flows: list[tuple[Path, int, float]]
 
 def context_key(accel_name: str,
                 flows: list[tuple[Path, int, float]]) -> str:
-    """Canonical context: accel + sorted (path, msg bucket, load decile)."""
-    parts = [(int(p), msg_bucket(m), int(round(l * 10)))
-             for p, m, l in canonical_context(flows)]
-    return accel_name + "|" + ";".join(f"{p}.{m}.{l}" for p, m, l in parts)
+    """Canonical context: accel + sorted (path, msg bucket, load decile).
+
+    A non-empty resource-demand hint (optional 4th tuple element) is
+    appended to that flow's key part — a hinted tenant profiles under its
+    own context.  Hint-free tuples produce keys bitwise-identical to the
+    pre-vector format, so committed baselines keep hitting."""
+    parts = []
+    for t in canonical_context(flows):
+        s = (f"{int(t[0])}.{msg_bucket(t[1])}.{int(round(t[2] * 10))}")
+        if len(t) > 3 and t[3]:
+            s += "~" + ",".join(f"{nm}:{ic:g}:{ec:g}"
+                                for nm, ic, ec in t[3])
+        parts.append(s)
+    return accel_name + "|" + ";".join(parts)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(init=False)
 class CapacityEntry:
-    capacity_gbps: float           # aggregate ingress goodput achievable
-    per_flow_gbps: list[float]     # split under fair arbitration
-    fairness: float                # Jain's index of the split
-    ctx: str = ""
+    """Profiled capacity of one context, as a resource vector.
+
+    Axis 0 is always the link: ``capacity[0]`` is the measured aggregate
+    ingress goodput and ``per_flow[0]`` the measured per-flow split under
+    fair arbitration (exactly the pre-vector ``capacity_gbps`` /
+    ``per_flow_gbps`` fields, which remain readable as properties).  Each
+    extra axis r >= 1 mirrors one ``LinkSpec.resources`` entry:
+    ``capacity[r]`` is that axis' shaped capacity in Gbps and
+    ``per_flow[r][i]`` the flow's *demand coefficient* — Gbps charged on
+    the axis per Gbps of ingress goodput (ingress coefficient plus the
+    egress coefficient scaled by the device's egress/ingress byte ratio).
+
+    Migration note: the scalar fields were renamed —
+    ``capacity_gbps`` -> ``capacity[0]``, ``per_flow_gbps`` ->
+    ``per_flow[0]``.  Scalar positional arguments are promoted to R=1
+    vectors silently; the old keyword names still construct entries via a
+    ``DeprecationWarning`` shim."""
+
+    capacity: list          # [R] Gbps per axis (axis 0 measured)
+    per_flow: list          # [R][n]: measured split / demand coefficients
+    fairness: float         # Jain's index of the link split
+    ctx: str
+    res_names: list         # [R] axis names (axis 0 = "link")
+
+    def __init__(self, capacity=None, per_flow=None, fairness: float = 0.0,
+                 ctx: str = "", res_names=None, *,
+                 capacity_gbps=None, per_flow_gbps=None):
+        if capacity_gbps is not None or per_flow_gbps is not None:
+            warnings.warn(
+                "CapacityEntry(capacity_gbps=..., per_flow_gbps=...) is "
+                "deprecated: pass the vector fields capacity= / per_flow= "
+                "(scalars are promoted to R=1)", DeprecationWarning,
+                stacklevel=2)
+            capacity = capacity_gbps if capacity is None else capacity
+            per_flow = per_flow_gbps if per_flow is None else per_flow
+        if capacity is None:
+            raise TypeError("CapacityEntry requires capacity")
+        if not isinstance(capacity, (list, tuple, np.ndarray)):
+            capacity = [capacity]              # scalar -> R=1 degenerate
+        per_flow = [] if per_flow is None else per_flow
+        if not (len(per_flow) and isinstance(per_flow[0],
+                                             (list, tuple, np.ndarray))):
+            per_flow = [per_flow]              # flat split -> R=1
+        self.capacity = [float(c) for c in capacity]
+        self.per_flow = [[float(g) for g in row] for row in per_flow]
+        self.fairness = float(fairness)
+        self.ctx = ctx
+        if res_names is None:
+            res_names = [RES_LINK] + [f"res{r}"
+                                      for r in range(1, len(self.capacity))]
+        self.res_names = list(res_names)
+
+    # -- renamed-field compatibility (see class docstring) -------------
+    @property
+    def capacity_gbps(self) -> float:
+        return self.capacity[0]
+
+    @property
+    def per_flow_gbps(self) -> list:
+        return self.per_flow[0]
 
     def slo_tag(self, slo_gbps: list[float], margin: float = 0.02) -> bool:
         """True = SLO-Friendly: requested SLOs fit the profiled capacity and
@@ -97,26 +167,41 @@ class CapacityEntry:
         inequalities."""
         return self.slo_margin(slo_gbps, margin) >= 0
 
+    def _axis_demand(self, r: int, slo_gbps: list[float]) -> float:
+        """Gbps the SLO vector puts on extra axis r (coefficient-weighted;
+        aggregate-style queries use the worst coefficient)."""
+        coefs = self.per_flow[r]
+        if coefs and len(slo_gbps) == len(coefs):
+            return sum(s * c for s, c in zip(slo_gbps, coefs))
+        worst = max(coefs, default=1.0)
+        return sum(s * worst for s in slo_gbps)
+
     def residual_gbps(self, slo_gbps: list[float],
                       margin: float = 0.02) -> float:
-        """Aggregate profiled capacity left once the context's SLO vector is
-        honored (negative = oversubscribed).  The quantity best-fit
-        placement packs on: the server whose post-admission residual is
-        smallest-but-nonnegative is the tightest fit."""
-        return self.capacity_gbps * (1 - margin) - sum(slo_gbps)
+        """Profiled capacity left once the context's SLO vector is honored
+        (negative = oversubscribed), minimized over every resource axis.
+        The quantity best-fit placement packs on: the server whose
+        post-admission residual is smallest-but-nonnegative is the
+        tightest fit.  R=1 entries reduce to the link-axis residual."""
+        res = self.capacity[0] * (1 - margin) - sum(slo_gbps)
+        for r in range(1, len(self.capacity)):
+            res = min(res, self.capacity[r] * (1 - margin)
+                      - self._axis_demand(r, slo_gbps))
+        return res
 
-    def slo_margin(self, slo_gbps: list[float], margin: float = 0.02
-                   ) -> float:
-        """Worst-case normalized headroom across every ``slo_tag``
-        inequality: min of (limit - demand) / limit over the aggregate
-        capacity and the per-flow contention ceilings.  Sign-consistent
-        with ``slo_tag`` (>= 0 iff SLO-Friendly); the magnitude is what
-        SLO-aware placement maximizes — how far the post-admission context
-        sits from its nearest constraint."""
-        cap = self.capacity_gbps * (1 - margin)
+    def slo_margins(self, slo_gbps: list[float], margin: float = 0.02
+                    ) -> list[float]:
+        """Per-axis normalized headroom, aligned with ``res_names``.
+
+        Axis 0 is the pre-vector ``slo_margin``: min of
+        (limit - demand) / limit over the aggregate link capacity and the
+        per-flow contention ceilings.  Each extra axis r compares the
+        coefficient-weighted SLO demand against the axis' shaped
+        capacity."""
+        cap = self.capacity[0] * (1 - margin)
         m = (cap - sum(slo_gbps)) / max(cap, 1e-12)
-        n = len(self.per_flow_gbps)
-        ceil = [n * g * (1 - margin) for g in self.per_flow_gbps]
+        n = len(self.per_flow[0])
+        ceil = [n * g * (1 - margin) for g in self.per_flow[0]]
         if n and len(slo_gbps) == n:
             pairs = zip(slo_gbps, ceil)
         else:
@@ -124,17 +209,37 @@ class CapacityEntry:
             pairs = ((s, best) for s in slo_gbps)
         for s, c in pairs:
             m = min(m, (c - s) / max(c, 1e-12))
+        out = [m]
+        for r in range(1, len(self.capacity)):
+            lim = self.capacity[r] * (1 - margin)
+            out.append((lim - self._axis_demand(r, slo_gbps))
+                       / max(lim, 1e-12))
+        return out
+
+    def slo_margin(self, slo_gbps: list[float], margin: float = 0.02
+                   ) -> float:
+        """Worst-case headroom across ALL resource axes: the min of
+        ``slo_margins``.  Sign-consistent with ``slo_tag`` (>= 0 iff
+        SLO-Friendly); the magnitude is what SLO-aware placement maximizes.
+        R=1 entries reproduce the pre-vector value bitwise (the min over a
+        single axis is that axis)."""
+        ms = self.slo_margins(slo_gbps, margin)
+        m = ms[0]
+        for v in ms[1:]:
+            m = min(m, v)
         return m
 
 
 def _context_specs(flows: list[tuple[Path, int, float]]) -> list[FlowSpec]:
-    return [
-        FlowSpec(i, i, p, 0,
-                 TrafficPattern(msg_bytes=m, load=max(l, 0.99),
-                                process="poisson"),
-                 SLO.gbps(1e9), weight=1.0)
-        for i, (p, m, l) in enumerate(canonical_context(flows))
-    ]
+    out = []
+    for i, t in enumerate(canonical_context(flows)):
+        p, m, l = t[0], t[1], t[2]
+        hint = tuple(tuple(h) for h in t[3]) if len(t) > 3 else ()
+        out.append(FlowSpec(i, i, p, 0,
+                            TrafficPattern(msg_bytes=m, load=max(l, 0.99),
+                                           process="poisson"),
+                            SLO.gbps(1e9), weight=1.0, res_demand=hint))
+    return out
 
 
 class ProfileTable:
@@ -160,11 +265,46 @@ class ProfileTable:
                          clock_hz=self.clock_hz,
                          shaping=SHAPING_NONE, arbiter=ARB_RR)
 
-    def _entry_from_result(self, key: str, res, n: int) -> CapacityEntry:
+    def _entry_from_result(self, key: str, res, n: int,
+                           accel: AcceleratorSpec | None = None,
+                           ctx: list | None = None) -> CapacityEntry:
         per = [res.mean_ingress_gbps(i, None) for i in range(n)]
         x = np.asarray(per)
         fair = float((x.sum() ** 2) / (len(x) * (x ** 2).sum() + 1e-12))
-        entry = CapacityEntry(float(x.sum()), per, fair, key)
+        caps = [float(x.sum())]
+        pflows = [per]
+        names = [RES_LINK]
+        # extra axes: shaped capacity is the axis' static cap; the per-flow
+        # column is the demand coefficient the engine charges (ingress
+        # coefficient + egress coefficient x the device's egress/ingress
+        # byte ratio, with fabric_only axes skipping off-fabric directions)
+        for rs in getattr(self.link, "resources", ()):
+            coefs = []
+            for t in canonical_context(ctx or []):
+                p, m = Path(t[0]), float(t[1])
+                hint = t[3] if len(t) > 3 else ()
+                ic = ec = None
+                for nm, a, b in hint:
+                    if nm == rs.name:
+                        ic, ec = float(a), float(b)
+                        break
+                if ic is None:
+                    ic, ec = (accel.resource_demand(rs.name)
+                              if accel is not None else (1.0, 1.0))
+                if rs.fabric_only:
+                    if PATH_INGRESS_DIR[p] == 2:
+                        ic = 0.0
+                    if PATH_EGRESS_DIR[p] == 2:
+                        ec = 0.0
+                if p == Path.INLINE_NIC_RX or accel is None:
+                    ratio = 1.0   # full payload delivered to the host
+                else:
+                    ratio = float(accel.egress_bytes(m)) / max(m, 1.0)
+                coefs.append(max(ic, 0.0) + ratio * max(ec, 0.0))
+            caps.append(float(rs.capacity_gbps))
+            pflows.append(coefs)
+            names.append(rs.name)
+        entry = CapacityEntry(caps, pflows, fair, key, names)
         self.entries[key] = entry
         return entry
 
@@ -184,7 +324,7 @@ class ProfileTable:
         tbs = baselines.make_tb_state(baselines.HOST_NO_TS,
                                       [tb.TBParams(1, 1, 1)] * len(specs))
         res = simulate(fset, atab, self.link, cfg, tbs, arr_t, arr_sz)
-        return self._entry_from_result(key, res, len(specs))
+        return self._entry_from_result(key, res, len(specs), accel, flows)
 
     def profile_contexts(self,
                          contexts: Sequence[tuple[AcceleratorSpec,
@@ -237,11 +377,27 @@ class ProfileTable:
     @classmethod
     def from_json(cls, path: str, link: LinkSpec | None = None
                   ) -> "ProfileTable":
+        """Load a persisted table.  Both schemas are accepted: the current
+        vector form (``capacity`` / ``per_flow`` / ``res_names``) and the
+        pre-vector scalar form (``capacity_gbps`` / ``per_flow_gbps``) —
+        scalar entries load as R=1 degenerate vectors whose ``capacity[0]``
+        / ``per_flow[0]`` are bit-for-bit the persisted floats."""
         t = cls(link)
         with open(path) as f:
             for k, v in json.load(f).items():
-                t.entries[k] = CapacityEntry(**v)
+                if "capacity_gbps" in v:       # legacy scalar schema
+                    t.entries[k] = CapacityEntry(
+                        v["capacity_gbps"], v["per_flow_gbps"],
+                        v.get("fairness", 0.0), v.get("ctx", ""))
+                else:
+                    t.entries[k] = CapacityEntry(
+                        v["capacity"], v["per_flow"],
+                        v.get("fairness", 0.0), v.get("ctx", ""),
+                        v.get("res_names"))
         return t
+
+    #: alias — the control-plane callers name the operation "load"
+    load_json = from_json
 
 
 #: running counters over batched profiling: ``calls`` = invocations of
@@ -316,6 +472,6 @@ def profile_contexts_multi(jobs: Sequence[tuple["ProfileTable",
         link_arg = links[0] if all(ln is links[0] for ln in links) else links
         results = simulate_batch(fsets, atabs, link_arg, cfg, tbss,
                                  *stack_arrivals(arrs))
-        for (table, key, _a, _f), res, n in zip(items, results, ns):
-            table._entry_from_result(key, res, n)
+        for (table, key, a, f), res, n in zip(items, results, ns):
+            table._entry_from_result(key, res, n, a, f)
     return [t.entries[k] for (t, _, _), k in zip(jobs, keys)]

@@ -140,24 +140,32 @@ class ArcusRuntime:
         accel = self.accel_specs[spec.accel_id]
         peers = [s.spec for s in self.table.values()
                  if s.spec.accel_id == spec.accel_id] + [spec]
-        ctx = [(s.path, s.pattern.msg_bytes, s.pattern.load) for s in peers]
+        # a tenant's resource-demand hint rides the context as a 4th tuple
+        # element (re-keying its profiled contexts); hint-free tenants keep
+        # the 3-tuple form so every existing context key stays bit-stable
+        ctx = [(s.path, s.pattern.msg_bytes, s.pattern.load)
+               + ((s.res_demand,) if s.res_demand else ())
+               for s in peers]
         return accel, peers, ctx
 
     def _admission_check(self, spec: FlowSpec, _context=None):
         """CapacityPlanning(CHECK) with its evidence: (SLO-Friendly?,
-        CapacityEntry, canonical-order SLO vector, slo_margin).
-        ``place_fleet`` scores candidates with exactly this tuple — and
-        passes back the (accel, peers, ctx) triple it already built for
-        profiling — so a feasible candidate is by construction one
-        ``register`` will accept."""
+        CapacityEntry, canonical-order SLO vector, slo_margin, per-axis
+        slo_margins).  ``place_fleet`` scores candidates with exactly this
+        tuple — and passes back the (accel, peers, ctx) triple it already
+        built for profiling — so a feasible candidate is by construction
+        one ``register`` will accept."""
         accel, peers, ctx = (_context if _context is not None
                              else self._admission_context(spec))
         entry = self.profile.capacity(accel, ctx)
         # per-flow SLO vector in the entry's canonical context order
         slo_gbps = [self._slo_gbps(peers[i]) for i in canonical_order(ctx)]
-        margin = entry.slo_margin(slo_gbps)
+        margin_res = entry.slo_margins(slo_gbps)
+        margin = margin_res[0]
+        for v in margin_res[1:]:
+            margin = min(margin, v)
         # slo_tag is defined as slo_margin >= 0 — one decision, one copy
-        return margin >= 0, entry, slo_gbps, margin
+        return margin >= 0, entry, slo_gbps, margin, tuple(margin_res)
 
     def _admission_control(self, spec: FlowSpec) -> bool:
         """CapacityPlanning(CHECK): the profiled capacity of the would-be

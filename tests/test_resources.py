@@ -1,0 +1,364 @@
+"""Multi-resource contention tests: the R=1 degenerate bitwise contract
+across engine / placement / controller, resource-axis charge semantics
+(grant-gated ingress, debt-charged egress, burst carry, fabric-only
+exemption), the vector-margin plumbing through CapacityEntry and the
+placement policies, scalar-JSON schema compatibility, the CapacityEntry
+deprecation shims, and the service-vectorization threshold knob."""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import engine, placement, token_bucket as tb
+from repro.core.accelerator import CATALOG, AccelTable
+from repro.core.controller import FleetController, TenantEvent
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.interconnect import (RES_MEM_BW, LinkSpec, ResourceSpec,
+                                     host_dma, mem_bw)
+from repro.core.profiler import CapacityEntry, ProfileTable, context_key
+from repro.core.runtime import ArcusRuntime, place_fleet
+from repro.core.sim import (SHAPING_HW, SHAPING_NONE, SimConfig,
+                            gen_arrivals, simulate, simulate_batch,
+                            stack_arrivals)
+
+_EXACT_KEYS = ("c_adm_msgs", "c_done_msgs", "c_drops", "c_adm_bytes",
+               "c_done_bytes")
+
+#: an axis so wide it can never run dry — the inert-axis degenerate case
+_HUGE = 1e6
+
+
+def _assert_results_equal(a, b, label=""):
+    for k in _EXACT_KEYS:
+        assert np.array_equal(a.counters[k], b.counters[k]), \
+            (label, k, a.counters[k], b.counters[k])
+    np.testing.assert_array_equal(a.comp_flow, b.comp_flow)
+    np.testing.assert_array_equal(a.comp_sz, b.comp_sz)
+    np.testing.assert_allclose(a.counters["c_lat_sum"],
+                               b.counters["c_lat_sum"], rtol=1e-6)
+
+
+def _scenario(n_flows=2, n_ticks=12_000, path=Path.FUNCTION_CALL,
+              accel="synthetic50", seed=0, load=None, **cfg_kw):
+    slos = [10.0 + 5.0 * i for i in range(n_flows)]
+    specs = [FlowSpec(i, i, path, 0,
+                      TrafficPattern(1024,
+                                     load=(load or 0.8) / n_flows,
+                                     process="poisson"), SLO.gbps(s))
+             for i, s in enumerate(slos)]
+    flows = FlowSet.build(specs)
+    cfg = SimConfig(n_ticks=n_ticks,
+                    **{"shaping": SHAPING_HW, **cfg_kw})
+    arr = gen_arrivals(flows, cfg, seed=seed,
+                       load_ref_gbps={i: 55.0 for i in range(n_flows)})
+    tbs = tb.pack([tb.params_for_gbps(s) for s in slos])
+    accels = AccelTable.build([CATALOG[accel]])
+    return flows, accels, cfg, tbs, arr
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3 — the R=1 degenerate contract, engine layer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["huge_cap", "zero_demand", "both"])
+@pytest.mark.parametrize("fast", [True, False])
+def test_inert_axis_bitwise_equal_to_default(variant, fast):
+    """A resource vector that cannot bind — a huge-capacity axis and/or an
+    axis every accelerator charges 0.0 on — must reproduce the default
+    (R=1) engine bitwise: same counters, completions and latencies, on
+    both the vectorized and sequential stage paths."""
+    flows, accels, cfg, tbs, arr = _scenario(
+        grant_fast=fast, stage_fast=fast, k_grant=4)
+    base = simulate(flows, accels, LinkSpec(), cfg, tbs, *arr)
+
+    if variant == "huge_cap":
+        res = (mem_bw(_HUGE),)
+        accels_v = accels
+    else:
+        # a *tight* axis (2 Gbps would halve goodput) that the device
+        # charges nothing on — inert because the demand is zero
+        spec = dataclasses.replace(CATALOG["synthetic50"],
+                                   res_demand=((RES_MEM_BW, 0.0, 0.0),))
+        accels_v = AccelTable.build([spec])
+        res = ((mem_bw(2.0), host_dma(_HUGE)) if variant == "both"
+               else (mem_bw(2.0),))
+    link_v = LinkSpec(resources=res)
+    got = simulate(flows, accels_v, link_v, cfg, tbs, *arr)
+    _assert_results_equal(base, got, variant)
+
+
+def test_resource_batch_matches_serial_bitwise():
+    """Ragged batch with two live resource axes == serial unpadded runs,
+    counter for counter — and the whole batch is ONE compiled entry."""
+    link = LinkSpec(resources=(mem_bw(12.0), host_dma(20.0)))
+    els = []
+    for n, path in ((3, Path.FUNCTION_CALL), (2, Path.INLINE_NIC_TX)):
+        f, a, cfg, t, arr = _scenario(n_flows=n, n_ticks=6_000, path=path,
+                                      accel="decompress", seed=n)
+        els.append((f, a, cfg, t, arr))
+    serial = [simulate(f, a, link, c, t, *arr)
+              for f, a, c, t, arr in els]
+    engine.cache_clear()
+    batch = simulate_batch([f for f, *_ in els], els[0][1], link,
+                           els[0][2], [t for _, _, _, t, _ in els],
+                           *stack_arrivals([arr for *_, arr in els]))
+    assert engine.cache_info() == {"entries": 1, "traces": 1}
+    for s, b, (f, *_r) in zip(serial, batch, els):
+        _assert_results_equal(s, b, f"n={f.n}")
+
+
+def test_batch_rejects_mismatched_axis_counts():
+    f, a, cfg, t, arr = _scenario(n_flows=1, n_ticks=500)
+    links = [LinkSpec(), LinkSpec(resources=(mem_bw(10.0),))]
+    with pytest.raises(ValueError, match="resource"):
+        simulate_batch(f, a, links, cfg, [t, t],
+                       *stack_arrivals([arr, arr]))
+
+
+# ---------------------------------------------------------------------------
+# Resource-axis charge semantics
+# ---------------------------------------------------------------------------
+
+
+def _goodput(link, **kw):
+    f, a, cfg, t, arr = _scenario(n_flows=1, n_ticks=20_000, **kw)
+    res = simulate(f, a, link, cfg, t, *arr)
+    return float(res.mean_ingress_gbps(0, f))
+
+
+def test_tight_axis_throttles_to_demand_algebra():
+    """A saturated axis sustains cap / (w_in + w_eg * egress_ratio) of
+    ingress goodput: synthetic50 (R=1 egress) with default 1.0/1.0
+    demand on an 8 Gbps axis lands at ~4 Gbps — the same algebra
+    CapacityEntry's per-flow coefficients use."""
+    free = _goodput(LinkSpec())
+    tight = _goodput(LinkSpec(resources=(mem_bw(8.0),)))
+    assert free > 9.0                        # SLO-shaped, axis not binding
+    assert 3.4 < tight < 4.05, tight         # cap/(1+1), minus startup debt
+
+
+def test_burst_knob_carries_idle_budget():
+    """burst_bytes > 0 lets idle-tick budget accumulate (token-bucket
+    depth); burst=0 loses it exactly like the link does."""
+    lose = _goodput(LinkSpec(resources=(mem_bw(8.0),)))
+    keep = _goodput(LinkSpec(resources=(mem_bw(8.0, burst_bytes=2**20),)))
+    assert keep >= lose
+    assert keep > 3.9                        # bursts recover poisson gaps
+
+
+def test_fabric_only_axis_exempts_off_fabric_bytes():
+    """INLINE_NIC_TX egresses to the wire (off-fabric): a fabric_only
+    host-DMA axis charges its ingress bytes only, so the same capacity
+    sustains ~2x the goodput of a pooled axis charging both directions."""
+    pooled = _goodput(LinkSpec(resources=(mem_bw(8.0),)),
+                      path=Path.INLINE_NIC_TX)
+    fabric = _goodput(LinkSpec(resources=(host_dma(8.0),)),
+                      path=Path.INLINE_NIC_TX)
+    assert 3.4 < pooled < 4.05, pooled
+    assert fabric > 1.7 * pooled, (fabric, pooled)
+
+
+# ---------------------------------------------------------------------------
+# CapacityEntry: vector margins, legacy shims, JSON schemas
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_entry_vector_margin_is_min_over_axes():
+    e = CapacityEntry([50.0, 20.0], [[25.0, 25.0], [2.0, 2.0]], 1.0,
+                      res_names=["link", RES_MEM_BW])
+    slo = [10.0, 10.0]
+    m = e.slo_margins(slo)
+    assert len(m) == 2
+    assert e.slo_margin(slo) == min(m)
+    # axis 1 binds: 10+10 SLO * 2.0 coef = 40 demand > 20 cap
+    assert m[1] < 0 < m[0]
+    assert not e.slo_tag(slo)
+    # R=1 entries keep the scalar semantics exactly
+    e1 = CapacityEntry(50.0, [25.0, 25.0], 1.0)
+    assert e1.slo_margins(slo) == [e1.slo_margin(slo)]
+
+
+def test_capacity_entry_legacy_kwargs_warn_but_work():
+    with pytest.warns(DeprecationWarning, match="capacity_gbps"):
+        e = CapacityEntry(capacity_gbps=27.0, per_flow_gbps=[2.0, 25.0])
+    assert e.capacity == [27.0]
+    assert e.per_flow == [[2.0, 25.0]]
+    assert e.capacity_gbps == 27.0 and e.per_flow_gbps == [2.0, 25.0]
+    # positional scalar promotion is the supported spelling — silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        e2 = CapacityEntry(27.0, [2.0, 25.0], 1.0)
+    assert e2.capacity == e.capacity and e2.per_flow == e.per_flow
+
+
+def test_profile_table_scalar_json_loads_bit_for_bit(tmp_path):
+    """Satellite 1: a pre-vector JSON table (scalar capacity_gbps /
+    per_flow_gbps entries) loads as R=1 degenerate vectors whose floats —
+    and therefore margins, tags and admission decisions — are bit-for-bit
+    the persisted values.  load_json is the from_json alias."""
+    table = ProfileTable(n_ticks=4_000)
+    ctx = [(Path.FUNCTION_CALL, 1500, 0.9), (Path.FUNCTION_CALL, 512, 0.5)]
+    entry = table.profile_context(CATALOG["ipsec32"], ctx)
+    new_p, old_p = tmp_path / "new.json", tmp_path / "legacy.json"
+    table.to_json(str(new_p))
+    # re-emit the same table in the pre-vector schema
+    legacy = {k: {"capacity_gbps": v.capacity[0],
+                  "per_flow_gbps": list(v.per_flow[0]),
+                  "fairness": v.fairness, "ctx": v.ctx}
+              for k, v in table.entries.items()}
+    old_p.write_text(json.dumps(legacy))
+
+    for p in (new_p, old_p):
+        loaded = ProfileTable.load_json(str(p))
+        assert loaded.entries.keys() == table.entries.keys()
+        for k, v in table.entries.items():
+            w = loaded.entries[k]
+            assert w.capacity[0] == v.capacity[0]
+            assert list(w.per_flow[0]) == list(v.per_flow[0])
+            assert w.fairness == v.fairness
+            slo = [4.0] * len(v.per_flow[0])
+            assert w.slo_margin(slo) == v.slo_margin(slo)
+            assert w.slo_tag(slo) == v.slo_tag(slo)
+            assert w.residual_gbps(slo) == v.residual_gbps(slo)
+    assert entry.slo_margins([4.0, 4.0])[0] == entry.slo_margin([4.0, 4.0])
+
+
+def test_context_key_stable_without_hints():
+    base = [(Path.FUNCTION_CALL, 1024, 0.5), (Path.INLINE_NIC_TX, 64, 0.9)]
+    k3 = context_key("aes", base)
+    assert "~" not in k3                     # pre-vector keys unchanged
+    hinted = [t + (((RES_MEM_BW, 0.05, 0.1),),) for t in base]
+    k4 = context_key("aes", hinted)
+    assert k4 != k3 and k4.startswith(k3.split("|")[0])
+    # hint participates in identity, not in canonical order
+    assert context_key("aes", list(reversed(hinted))) == k4
+
+
+# ---------------------------------------------------------------------------
+# Placement: vector margins thread through candidates and policies
+# ---------------------------------------------------------------------------
+
+
+def _cand(server, margin_res, key):
+    return placement.Candidate(
+        server=server, accel_id=0,
+        spec=FlowSpec(0, 0, Path.FUNCTION_CALL, 0, TrafficPattern(1024),
+                      SLO.gbps(1.0)),
+        entry=CapacityEntry(50.0, [50.0], 1.0), slo_gbps=(1.0,),
+        feasible=True, margin=min(margin_res), residual=10.0,
+        server_key=key, margin_res=tuple(margin_res))
+
+
+def test_slo_aware_axis_scoring_vs_vector_scoring():
+    """Vector scoring (min over axes) and axis-0 scoring pick different
+    servers when link headroom and resource headroom disagree — the
+    mechanism benchmarks/contention.py measures fleet-wide."""
+    cands = [_cand(0, [0.8, 0.1], key=(("a",), ())),   # link-rich, mem-poor
+             _cand(1, [0.4, 0.5], key=(("b",), ()))]   # balanced
+    assert placement.SLOAware().select(cands).server == 1
+    assert placement.SLOAware(axis=0).select(cands).server == 0
+    assert placement.SLOAware(axis=0).name == "slo_aware_axis0"
+    # hand-built candidates without margin_res fall back to the scalar
+    bare = dataclasses.replace(cands[0], margin_res=())
+    assert placement.SLOAware(axis=1)._score(bare) == bare.margin
+
+
+def test_place_fleet_populates_vector_margins():
+    link = LinkSpec(resources=(mem_bw(40.0),))
+    profile = ProfileTable(n_ticks=4_000, link=link)
+    rts = [ArcusRuntime([CATALOG["synthetic50"]], profile_table=profile,
+                        link=link)]
+    spec = FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(1024, load=0.5, process="poisson"),
+                    SLO.gbps(8.0))
+    placed = place_fleet(rts, [spec], policy=placement.SLOAware())
+    assert placed[0].accepted
+    entry = rts[0].profile.lookup("synthetic50",
+                                  [(Path.FUNCTION_CALL, 1024, 0.5)])
+    assert entry is not None and len(entry.capacity) == 2
+    assert entry.res_names == ["link", RES_MEM_BW]
+    margins = entry.slo_margins([8.0])
+    assert len(margins) == 2
+    assert entry.slo_margin([8.0]) == min(margins)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3 — degenerate contract, placement + controller layers
+# ---------------------------------------------------------------------------
+
+
+def _fleet(link, profile_ticks=4_000):
+    profile = ProfileTable(n_ticks=profile_ticks, link=link)
+    return [ArcusRuntime([CATALOG["synthetic50"]], profile_table=profile,
+                         link=link)
+            for _ in range(2)]
+
+
+def _churn(link):
+    rts = _fleet(link)
+    ctrl = FleetController(rts)
+    specs = [FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                      TrafficPattern(1024, load=0.4, process="poisson"),
+                      SLO.gbps(6.0 + 2.0 * i))
+             for i in range(4)]
+    placed = ctrl.place(specs, policy=placement.SLOAware())
+    events = [TenantEvent.depart(2, tenant_id=1)]
+    res, reports = ctrl.run(total_ticks=12_000, window_ticks=3_000,
+                            seeds=[1, 2], events=events,
+                            load_ref_gbps=[{i: 32.0 for i in range(4)}] * 2)
+    return placed, res, reports, ctrl
+
+
+def test_degenerate_placement_and_churn_bitwise():
+    """An inert huge-capacity axis must not perturb the control plane:
+    identical admission decisions, churn counters, window reports and
+    controller stats vs the default R=1 link."""
+    p0, r0, w0, c0 = _churn(LinkSpec())
+    p1, r1, w1, c1 = _churn(LinkSpec(resources=(mem_bw(_HUGE),)))
+    assert [(p.accepted, p.server, p.accel_id) for p in p0] == \
+           [(p.accepted, p.server, p.accel_id) for p in p1]
+    for b in range(2):
+        for k in _EXACT_KEYS:
+            np.testing.assert_array_equal(r0[b].counters[k],
+                                          r1[b].counters[k])
+        assert len(w0[b]) == len(w1[b])
+        for wa, wb in zip(w0[b], w1[b]):
+            assert wa.measured == wb.measured
+            assert wa.violated == wb.violated
+            assert wa.reconfigured == wb.reconfigured
+    assert c0.stats == c1.stats
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2 — the service-vectorization threshold knob
+# ---------------------------------------------------------------------------
+
+
+def test_service_vec_min_env_and_field(monkeypatch):
+    assert SimConfig(n_ticks=1).service_vec_min == 8     # A*k_srv >= 8
+    monkeypatch.setenv("REPRO_SERVICE_VEC_MIN", "3")
+    assert SimConfig(n_ticks=1).service_vec_min == 3     # env rebinds
+    assert SimConfig(n_ticks=1,
+                     service_vec_min=99).service_vec_min == 99
+
+
+def test_service_vec_threshold_paths_bitwise_equal():
+    """Forcing the vectorized service stage (threshold 1) and forcing the
+    sequential fallback (threshold huge) on the SAME scenario must agree
+    bitwise — the knob moves a perf cliff, never a result."""
+    flows, accels, cfg, tbs, arr = _scenario(
+        n_flows=4, n_ticks=6_000, shaping=SHAPING_NONE, stage_fast=True,
+        k_srv=4, k_eg=4)
+    # A=1, k_srv=4: below the default 8 threshold — the knob decides
+    lo = dataclasses.replace(cfg, service_vec_min=1)       # vectorized
+    hi = dataclasses.replace(cfg, service_vec_min=10**6)   # sequential
+    link = LinkSpec()
+    engine.cache_clear()
+    r_lo = simulate(flows, accels, link, lo, tbs, *arr)
+    r_hi = simulate(flows, accels, link, hi, tbs, *arr)
+    # the threshold is structural: two distinct compiled entries
+    assert engine.cache_info()["entries"] == 2
+    _assert_results_equal(r_lo, r_hi, "service_vec_min")

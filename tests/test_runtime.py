@@ -73,16 +73,14 @@ def test_slo_tag_rejects_oversized_per_flow_slo():
     (regression: only the total used to be checked)."""
     # heterogeneous context in canonical order: the 64B flow first
     # (bucket 6), then the 1500B flow (bucket 10-11)
-    e = CapacityEntry(capacity_gbps=27.0, per_flow_gbps=[2.0, 25.0],
-                      fairness=0.6)
+    e = CapacityEntry(27.0, [2.0, 25.0], fairness=0.6)
     # oversized SLO on the small-message flow: ceiling = 2 flows x 2 Gbps
     assert not e.slo_tag([10.0, 5.0])
     # same totals, but the big SLO rides on the big-message flow: friendly
     assert e.slo_tag([3.0, 12.0])
     # aggregate-style query (SLO count != profiled flow count) is bounded
     # by the best single-flow ceiling: here 2 flows x 3 Gbps
-    e2 = CapacityEntry(capacity_gbps=27.0, per_flow_gbps=[2.0, 3.0],
-                       fairness=0.9)
+    e2 = CapacityEntry(27.0, [2.0, 3.0], fairness=0.9)
     assert e2.slo_tag([5.0])
     assert not e2.slo_tag([10.0])
 
