@@ -1,0 +1,284 @@
+"""Closed-loop adaptive shaping vs static registers — the control PR.
+
+Arcus's registers come from offline profiled capacities and change only
+on admit/rebalance; the closed loop (``repro.core.control``) re-decides
+them every window from measured SLO slack.  Two workloads, each run
+twice through the SAME ``FleetController`` harness — once with
+``StaticHold`` (bitwise the pre-control-loop behaviour) and once with
+the bi-level adaptive policy (``GlobalRetarget`` wrapping
+``SlackAIMD``):
+
+* **churn** — a B-server fleet where every server co-locates a
+  latency-critical tenant with a throughput reference, and bursty
+  on/off tenants arrive and depart at window boundaries
+  (``TenantEvent`` churn).  Static registers give the bursty arrivals
+  their planner-default deep buckets, so each burst piles into the
+  shared accelerator queue ahead of the latency tenant; the adaptive
+  loop sees the latency violations in ``WindowMetrics`` and
+  multiplicatively shrinks the bursty tenants' bucket depth.  Metric:
+  fleet-wide latency-SLO violation windows (and mean measured latency).
+* **fig9** — the Fig. 9 use-case-2 co-location (64B latency-critical
+  VM1 + a bursty 1500B VM2 shaped at 32 Gbps, averaging below it, on
+  one inline-NIC accelerator), driven through the managed window loop
+  instead of the one-shot baseline batch.  Static keeps VM2's
+  planner-default bucket, admitting its line-rate bursts wholesale;
+  adaptive shrinks the bucket window by window, pacing the bursts at
+  the refill rate.  Metric: VM1 p99 latency, with VM2's long-run
+  throughput held within 5% of the static arm's.
+
+Both adaptive runs ride ONE compiled engine entry (asserted) — the
+whole point of actuating through the existing register-rewrite path —
+and the benchmark asserts the adaptive arm strictly improves the
+workload's headline metric, which is the acceptance bar for the PR.
+``check_regression.py --pr-adaptive`` gates the committed JSON.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, Timer, save_json, us_per_tick
+from repro.core import control, engine
+from repro.core.accelerator import CATALOG, AcceleratorSpec, CURVE_LINEAR
+from repro.core.controller import FleetController, TenantEvent
+from repro.core.flow import SLO, FlowSpec, Path, SLOKind, TrafficPattern
+from repro.core.interconnect import LinkSpec
+from repro.core.profiler import ProfileTable
+from repro.core.runtime import ArcusRuntime
+
+#: profiling horizon is mode-independent so quick/full admission
+#: decisions (and the committed baseline) stay identical
+_PROFILE_TICKS = 8_000
+
+_CHURN_B = 2
+_CHURN_WINDOW = 1_500
+_CHURN_WINDOWS = 6
+
+
+def _adaptive_policy() -> control.ControlPolicy:
+    return control.GlobalRetarget(control.SlackAIMD(), period=3)
+
+
+def _lat_violations(reports) -> int:
+    """Latency-SLO violation windows across the fleet, from the
+    WindowMetrics schema (one consumer-side derivation, shared with the
+    controller's policies)."""
+    return sum(m.violated for rep in reports for w in rep
+               for m in w.metrics.values()
+               if m.kind == int(SLOKind.LATENCY))
+
+
+def _violations(reports) -> int:
+    """All SLO-violation windows (rate and latency) across the fleet."""
+    return sum(m.violated for rep in reports for w in rep
+               for m in w.metrics.values())
+
+
+def _lat_mean_us(reports) -> float:
+    lats = [m.lat_avg_s for rep in reports for w in rep
+            for m in w.metrics.values()
+            if m.kind == int(SLOKind.LATENCY) and np.isfinite(m.lat_avg_s)]
+    return float(np.mean(lats) * 1e6) if lats else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# Churn arm: latency tenants vs bursty churners
+# ---------------------------------------------------------------------------
+
+
+def _churn_fleet(profile: ProfileTable,
+                 policy: control.ControlPolicy) -> FleetController:
+    rts = [ArcusRuntime([CATALOG["synthetic50"]], profile_table=profile)
+           for _ in range(_CHURN_B)]
+    ctrl = FleetController(rts, control=policy)
+    specs = []
+    for b in range(_CHURN_B):
+        specs.append([
+            # latency-critical tenant: small messages, tight bound
+            FlowSpec(2000 + b, 2000 + b, Path.FUNCTION_CALL, 0,
+                     TrafficPattern(128, rate_mps=1.0e6, process="poisson"),
+                     SLO.latency(4e-6)),
+            # throughput reference
+            FlowSpec(1000 + b, 1000 + b, Path.FUNCTION_CALL, 0,
+                     TrafficPattern(1024, load=0.3, process="poisson"),
+                     SLO.gbps(8.0)),
+        ])
+    acc = ctrl.admit_fleet(specs)
+    assert all(all(a) for a in acc), "churn-arm admission rejected"
+    return ctrl
+
+
+def _burster(i: int) -> FlowSpec:
+    return FlowSpec(i, i, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(1500, load=0.5, process="onoff",
+                                   burst_len=64, duty=0.3),
+                    SLO.gbps(6.0))
+
+
+def _churn_events() -> list[TenantEvent]:
+    """One bursty tenant arrives per server at window 1, departs at
+    window 4; a second wave arrives at window 2 — violation pressure
+    through most of the timeline."""
+    ev = []
+    for i in range(_CHURN_B):
+        ev.append(TenantEvent.arrive(1, _burster(i), server=i))
+        ev.append(TenantEvent.depart(4, tenant_id=i))
+        ev.append(TenantEvent.arrive(2, _burster(100 + i), server=i))
+    return ev
+
+
+def _run_churn(profile: ProfileTable, policy: control.ControlPolicy,
+               *, timed: bool = False) -> dict:
+    ctrl = _churn_fleet(profile, policy)
+    kwargs = dict(total_ticks=_CHURN_WINDOW * _CHURN_WINDOWS,
+                  window_ticks=_CHURN_WINDOW,
+                  seeds=list(range(_CHURN_B)),
+                  load_ref_gbps=[{1: 32.0}] * _CHURN_B,
+                  events=_churn_events())
+    if timed:
+        engine.cache_clear()
+    with Timer() as t:
+        _res, reports = ctrl.run(**kwargs)
+    out = dict(
+        wall_s=t.s, policy=policy.name,
+        violations=_violations(reports),
+        lat_violations=_lat_violations(reports),
+        lat_mean_us=_lat_mean_us(reports),
+        reconfigs=sum(rt.table[f].reconfigs for rt in ctrl.runtimes
+                      for f in rt.table))
+    if timed:
+        info = engine.cache_info()
+        assert info == {"entries": 1, "traces": 1}, info
+        out["engine_entries"] = info["entries"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 arm: bursty MTU stream vs latency-critical tiny messages
+# ---------------------------------------------------------------------------
+
+_NIC = AcceleratorSpec("nic_acc", peak_gbps=60.0, curve=CURVE_LINEAR,
+                       overhead_ns=120.0, parallelism=2)
+_FIG9_KW = dict(k_grant=8, k_srv=8, k_eg=8, comp_cap=1 << 17)
+
+
+def _fig9_fleet(profile: ProfileTable,
+                policy: control.ControlPolicy) -> FleetController:
+    rt = ArcusRuntime([_NIC],
+                      link=LinkSpec(d2h_gbps=80.0, h2d_gbps=80.0,
+                                    credits=256),
+                      profile_table=profile)
+    ctrl = FleetController([rt], control=policy)
+    # window telemetry measures MEAN completion latency; a mean bound of
+    # 0.6us is the control-loop proxy for the paper's 1us TAIL bound —
+    # VM2's burst collisions push VM1's p99 to ~6us while the window
+    # mean only rises to ~0.7us, so the mean target must sit below the
+    # collision-free operating point for the loop to see tail pressure
+    acc = ctrl.admit_fleet([[
+        FlowSpec(0, 0, Path.INLINE_NIC_RX, 0,
+                 TrafficPattern(64, rate_mps=2.0e6, process="poisson"),
+                 SLO.latency(0.6e-6), priority=2),
+        # VM2's AVERAGE offered load (0.5 * 60 = 30 Gbps) sits below its
+        # 32 Gbps shaped rate — the Fig. 9 regime where bucket DEPTH is
+        # the lever: a deep bucket admits the line-rate bursts wholesale
+        # (VM1 collisions), a shallow one paces them at the refill rate
+        # without costing VM2 long-run throughput.  (A backlogged flow —
+        # average offered above the shaped rate — keeps its bucket
+        # pinned empty, and depth stops mattering at all.)
+        FlowSpec(1, 1, Path.INLINE_NIC_RX, 0,
+                 TrafficPattern(1500, load=0.5, process="onoff",
+                                burst_len=64, duty=0.3),
+                 SLO.gbps(32.0), priority=0),
+    ]])
+    assert all(all(a) for a in acc), "fig9-arm admission rejected"
+    return ctrl
+
+
+def _run_fig9(profile: ProfileTable, policy: control.ControlPolicy,
+              n_ticks: int, *, timed: bool = False) -> dict:
+    ctrl = _fig9_fleet(profile, policy)
+    kwargs = dict(total_ticks=n_ticks, window_ticks=n_ticks // 10,
+                  tick_cycles=4, seeds=[0], load_ref_gbps=[{1: 60.0}],
+                  sim_kwargs=dict(_FIG9_KW))
+    if timed:
+        engine.cache_clear()
+    with Timer() as t:
+        results, reports = ctrl.run(**kwargs)
+    res = results[0]
+    # time-based warmup cut: the admission transient (buckets start
+    # full, so window 0 admits a line-rate burst) is identical in both
+    # arms and would otherwise dominate the tail of both — the
+    # comparison is about the steady state the policy converges to
+    sel = (res.comp_flow == 0) & (res.comp_t_s >= 0.4 * res.seconds)
+    lat = np.sort(res.comp_lat_s[sel])
+    out = dict(
+        wall_s=t.s, policy=policy.name,
+        vm1_avg_us=float(np.mean(lat) * 1e6) if len(lat) else float("nan"),
+        vm1_p99_us=float(np.percentile(lat, 99) * 1e6) if len(lat)
+        else float("nan"),
+        vm2_gbps=float(np.mean([w.metrics[1].measured
+                                for w in reports[0][1:]])),
+        lat_violations=_lat_violations(reports))
+    if timed:
+        info = engine.cache_info()
+        assert info == {"entries": 1, "traces": 1}, info
+        out["engine_entries"] = info["entries"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows, payload = [], {}
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+
+    # -- churn arm -----------------------------------------------------
+    # warm every admission + envelope context on throwaway controllers
+    # sharing the ProfileTable, so the timed adaptive run profiles
+    # nothing and stays on ONE compiled engine entry
+    _run_churn(profile, control.StaticHold())
+    _run_churn(profile, _adaptive_policy())
+    churn_static = _run_churn(profile, control.StaticHold(), timed=True)
+    churn_adapt = _run_churn(profile, _adaptive_policy(), timed=True)
+    assert churn_static["violations"] >= 1, \
+        "churn arm lost its static violation pressure"
+    assert churn_adapt["violations"] < churn_static["violations"], \
+        "adaptive shaping did not reduce churn-arm SLO violations"
+    payload["churn"] = dict(
+        static=churn_static, adaptive=churn_adapt, improved=True)
+    rows.append(Row("adaptive/churn/static",
+                    us_per_tick(churn_static["wall_s"],
+                                _CHURN_B * _CHURN_WINDOW * _CHURN_WINDOWS),
+                    churn_static))
+    rows.append(Row("adaptive/churn/adaptive",
+                    us_per_tick(churn_adapt["wall_s"],
+                                _CHURN_B * _CHURN_WINDOW * _CHURN_WINDOWS),
+                    churn_adapt))
+
+    # -- fig9 arm ------------------------------------------------------
+    n_ticks = 60_000 if quick else 250_000
+    _run_fig9(profile, control.StaticHold(), n_ticks)
+    _run_fig9(profile, _adaptive_policy(), n_ticks)
+    fig9_static = _run_fig9(profile, control.StaticHold(), n_ticks,
+                            timed=True)
+    fig9_adapt = _run_fig9(profile, _adaptive_policy(), n_ticks,
+                           timed=True)
+    assert fig9_adapt["vm1_p99_us"] < fig9_static["vm1_p99_us"], \
+        "adaptive shaping did not reduce fig9 VM1 tail latency"
+    # both arms admit all of VM2's (sub-rate) traffic; pacing must not
+    # cost it long-run throughput
+    assert fig9_adapt["vm2_gbps"] >= 0.95 * fig9_static["vm2_gbps"], \
+        "adaptive shaping starved VM2 vs the static arm"
+    payload["fig9"] = dict(
+        static=fig9_static, adaptive=fig9_adapt,
+        improved=True,
+        p99_improvement_x=fig9_static["vm1_p99_us"]
+        / max(fig9_adapt["vm1_p99_us"], 1e-9))
+    rows.append(Row("adaptive/fig9/static",
+                    us_per_tick(fig9_static["wall_s"], n_ticks),
+                    fig9_static))
+    rows.append(Row("adaptive/fig9/adaptive",
+                    us_per_tick(fig9_adapt["wall_s"], n_ticks), fig9_adapt))
+
+    save_json("adaptive", payload)
+    return rows

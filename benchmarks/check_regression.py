@@ -38,7 +38,14 @@ perf trajectory artifact CI uploads for every PR:
     scoring must keep admitting strictly more SLO-friendly tenants than
     the memory-blind control plane, the vector placement's memory-axis
     utilization variance must stay at or below the memory-blind one,
-    and the R=1 degenerate bitwise gate must have held.
+    and the R=1 degenerate bitwise gate must have held;
+  * (when ``--pr-adaptive``/``--baseline-adaptive`` are given) the
+    closed-loop shaping gate: the adaptive policy must still beat
+    StaticHold on both workloads (fewer SLO-violation windows on the
+    churn arm — counts matching the committed baseline exactly, the
+    arm's config is mode-independent — and a strictly better VM1 tail
+    on the Fig. 9 arm with VM2 held at its SLO), with every timed run
+    still ONE compiled engine entry.
 
 Usage:
     python -m benchmarks.check_regression \
@@ -203,6 +210,41 @@ def summarize_contention(pr: dict, baseline: dict) -> dict:
     }
 
 
+def summarize_adaptive(pr: dict, baseline: dict) -> dict:
+    """Closed-loop shaping gate: the churn arm's violation-window counts
+    are deterministic and mode-independent, so they must match the
+    committed baseline exactly; the Fig. 9 arm's latencies scale with
+    the quick/full horizon, so only its improvement facts are gated
+    (adaptive strictly beats static p99 and keeps VM2's throughput
+    within 5% of the static arm's)."""
+    drift = {}
+    for arm in ("static", "adaptive"):
+        got = pr["churn"][arm]["violations"]
+        want = baseline["churn"][arm]["violations"]
+        if got != want:
+            drift[arm] = {"violations": [got, want]}
+    churn_gain = (pr["churn"]["static"]["violations"]
+                  - pr["churn"]["adaptive"]["violations"])
+    one_entry = all(
+        pr[wl][arm].get("engine_entries") == 1
+        for wl in ("churn", "fig9") for arm in ("static", "adaptive"))
+    fig9 = pr["fig9"]
+    p99x = fig9["p99_improvement_x"]
+    vm2_ok = (fig9["adaptive"]["vm2_gbps"]
+              >= 0.95 * fig9["static"]["vm2_gbps"])
+    return {
+        "churn_violations": {arm: pr["churn"][arm]["violations"]
+                             for arm in ("static", "adaptive")},
+        "churn_gain_static_minus_adaptive": churn_gain,
+        "fig9_p99_improvement_x": p99x,
+        "fig9_vm2_gbps_adaptive": fig9["adaptive"]["vm2_gbps"],
+        "one_engine_entry": one_entry,
+        "decision_drift_vs_baseline": drift,
+        "ok": (not drift and one_entry and churn_gain > 0
+               and p99x > 1.0 and vm2_ok),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pr", required=True,
@@ -221,6 +263,10 @@ def main() -> None:
                     help="contention.json from this PR's smoke run")
     ap.add_argument("--baseline-contention", default=None,
                     help="committed benchmarks/results/contention.json")
+    ap.add_argument("--pr-adaptive", default=None,
+                    help="adaptive.json from this PR's smoke run")
+    ap.add_argument("--baseline-adaptive", default=None,
+                    help="committed benchmarks/results/adaptive.json")
     ap.add_argument("--out", default="BENCH_pr.json")
     ap.add_argument("--max-slowdown", type=float, default=2.0)
     args = ap.parse_args()
@@ -239,6 +285,10 @@ def main() -> None:
     if bool(args.pr_contention) != bool(args.baseline_contention):
         ap.error("--pr-contention and --baseline-contention must be given "
                  "together (one alone would silently skip the contention "
+                 "gate)")
+    if bool(args.pr_adaptive) != bool(args.baseline_adaptive):
+        ap.error("--pr-adaptive and --baseline-adaptive must be given "
+                 "together (one alone would silently skip the adaptive "
                  "gate)")
     out = summarize(pr, baseline, args.max_slowdown)
     if args.pr_placement and args.baseline_placement:
@@ -260,12 +310,19 @@ def main() -> None:
         with open(args.baseline_contention) as f:
             base_cont = json.load(f)
         out["contention"] = summarize_contention(pr_cont, base_cont)
+    if args.pr_adaptive and args.baseline_adaptive:
+        with open(args.pr_adaptive) as f:
+            pr_adapt = json.load(f)
+        with open(args.baseline_adaptive) as f:
+            base_adapt = json.load(f)
+        out["adaptive"] = summarize_adaptive(pr_adapt, base_adapt)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))
     ok = (out["ok"] and out.get("placement", {}).get("ok", True)
           and out.get("churn", {}).get("ok", True)
-          and out.get("contention", {}).get("ok", True))
+          and out.get("contention", {}).get("ok", True)
+          and out.get("adaptive", {}).get("ok", True))
     if not out["ok"]:
         print(f"FAIL: cached rerun {out['cached_rerun_us_per_tick']:.1f} "
               f"us/tick is {out['slowdown_vs_baseline_x']:.2f}x the "
@@ -283,6 +340,11 @@ def main() -> None:
               "drifted, the SLO-friendly gain over the memory-blind "
               "control plane was lost, or the cross-resource variance "
               f"moved: {out['contention']}", file=sys.stderr)
+    if not out.get("adaptive", {}).get("ok", True):
+        print("FAIL: adaptive gate — closed-loop shaping stopped beating "
+              "StaticHold, churn violation counts drifted, or a timed "
+              "run stopped being one compiled engine entry: "
+              f"{out['adaptive']}", file=sys.stderr)
     if not ok:
         sys.exit(1)
     print(f"OK: cached rerun within {args.max_slowdown}x of baseline "
@@ -295,7 +357,12 @@ def main() -> None:
           + ("" if "contention" not in out else
              "; contention SLO-friendly gain "
              f"+{out['contention']['gain_slo_friendly_vector_vs_mem_blind']}"
-             ))
+             )
+          + ("" if "adaptive" not in out else
+             "; adaptive beats static "
+             f"(-{out['adaptive']['churn_gain_static_minus_adaptive']} "
+             "violation windows, fig9 p99 "
+             f"{out['adaptive']['fig9_p99_improvement_x']:.2f}x)"))
 
 
 if __name__ == "__main__":

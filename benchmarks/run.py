@@ -22,6 +22,7 @@ MODULES = [
     "placement",                 # fleet admission placement policies
     "churn",                     # tenant-lifecycle churn timelines
     "contention",                # multi-resource vector admission
+    "adaptive",                  # closed-loop shaping vs static registers
     "table2_shaping_accuracy",   # Table 2
     "fig3_provisioning",         # Fig. 3 / Table 1
     "fig6_throughput_cdf",       # Fig. 6 + Sec 5.2 latency

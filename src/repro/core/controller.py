@@ -34,6 +34,16 @@ the API around the tenant lifecycle:
   engine entry, with the PR 4 rebuild-skip path untouched: a window after
   which nothing changed resumes the carry with no register rewrite.
 
+The between-window path is an explicit measurement -> policy ->
+actuation pipeline: ``repro.core.telemetry`` turns the window's counter
+deltas into per-tenant ``WindowMetrics``, a ``repro.core.control``
+``ControlPolicy`` (the ``control=`` constructor argument) turns metrics
+into shaped-rate plans clamped to profiled capacity envelopes, and
+``control.actuate`` commits plans as token-bucket register values
+through the existing per-server re-pack path.  The default policy is
+``StaticHold`` — decisions and registers bitwise-identical to the
+pre-pipeline controller.
+
 Parity contract: with a static tenant set (no events) ``run`` is
 bit-for-bit the old ``run_managed_batch`` — counters, WindowReports and
 post-run control state equal B serial ``run_managed`` calls — and the
@@ -48,15 +58,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, placement, sim
+from repro.core import control as ctl
+from repro.core import engine, placement, sim, telemetry
 from repro.core import token_bucket as tb
 from repro.core.accelerator import AccelTable
 from repro.core.engine import INF_I32
 from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
 from repro.core.interconnect import ARB_RR
 from repro.core.profiler import profile_contexts_multi
-from repro.core.runtime import (_FLEET_POLL_KEYS, _compatible_accels,
-                                _fleet_counters, _measured_rates)
+from repro.core.runtime import _compatible_accels
 from repro.core.sim import SHAPING_HW, SimConfig, gen_arrivals
 
 ARRIVE = "arrive"
@@ -121,17 +131,31 @@ class FleetController:
 
     def __init__(self, runtimes: Sequence[Any], *,
                  policy: placement.PlacementPolicy | None = None,
-                 repack_threshold: float = 0.5):
+                 repack_threshold: float = 0.5,
+                 control: "ctl.ControlPolicy | None" = None,
+                 reuse_lanes: bool = False):
         self.runtimes = list(runtimes)
         self.policy = policy or placement.SLOAware()
         self.repack_threshold = float(repack_threshold)
         self.score_cache = placement.ScoreCache()
+        # the between-window shaping policy; the default StaticHold keeps
+        # every run bitwise-identical to the pre-control-loop controller
+        self.control = control if control is not None else ctl.StaticHold()
+        # opt-in: let mid-run arrivals refill hole lanes.  Lane recycling
+        # is measurement-safe now (engine.recycle_flow_lane and the run
+        # loop both reset the lane's delta baseline), but refilling
+        # changes lane layouts — and thus arbiter order and counter rows —
+        # versus the historical always-append behaviour, so it stays off
+        # by default to preserve the bitwise contract.
+        self.reuse_lanes = bool(reuse_lanes)
         self._lanes: list[list[int | None]] = [sorted(rt.table)
                                                for rt in self.runtimes]
         self._tenants: dict[int, int] = {}      # flow id -> server index
-        self._in_run = False     # mid-run arrivals take FRESH lanes (see
-                                 # _assign_lane) so no tenant inherits a
-                                 # predecessor's cumulative lane counters
+        self._in_run = False     # mid-run arrivals take FRESH lanes unless
+                                 # reuse_lanes opted into hole recycling
+                                 # (see _assign_lane)
+        self._envelopes: list[tuple[int, dict] | None] = \
+            [None] * len(self.runtimes)   # per-server (version, envelopes)
         self.stats = {"admitted": 0, "rejected": 0, "departed": 0,
                       "migrated": 0, "repacks": 0}
         self.last_events: list[dict] = []
@@ -158,14 +182,17 @@ class FleetController:
                 self._assign_lane(b, fid)
 
     def _assign_lane(self, b: int, fid: int) -> int:
-        """Give a flow a lane: holes first between runs (compactness);
-        always a FRESH appended lane mid-run, so an arriving tenant never
-        inherits a departed predecessor's cumulative lane counters (a
+        """Give a flow a lane: holes first between runs (compactness) —
+        and mid-run too when ``reuse_lanes`` is set, since lane surgery
+        now resets the recycled lane's counters and measurement baseline
+        (``engine.recycle_flow_lane`` + the run loop's prev-slab reset).
+        The historical default appends a FRESH lane mid-run, preserving
+        layout (and counter-row) compatibility bit-for-bit (a
         between-runs hole refill starts from a fresh carry anyway)."""
         lanes = self._lanes[b]
         if fid in lanes:
             return lanes.index(fid)
-        if not self._in_run:
+        if not self._in_run or self.reuse_lanes:
             for i, f in enumerate(lanes):
                 if f is None:
                     lanes[i] = fid
@@ -513,11 +540,11 @@ class FleetController:
         """One fleet-wide Algorithm 1 pass between engine windows.
 
         Measurement runs vectorized over the whole fleet (one
-        ``[B, width]`` ``_measured_rates`` slab); the per-flow violation /
-        ReAdjustPattern body is the exact serial code path
+        ``[B, width]`` ``telemetry.measured_rates`` slab); the per-flow
+        violation / ReAdjustPattern body is the exact serial code path
         (``ArcusRuntime._window_pass`` with the controller's lane map), so
         fleet decisions are the serial decisions by construction."""
-        cur = _fleet_counters(host)
+        cur = telemetry.fleet_counters(host)
         if prev is None:
             prev = {k: np.zeros_like(v) for k, v in cur.items()}
         window_s = cfg.seconds
@@ -528,7 +555,7 @@ class FleetController:
             for lane, fid in enumerate(self._lanes[b]):
                 if fid is not None:
                     kind[b, lane] = int(rt.table[fid].spec.slo.kind)
-        measured = _measured_rates(cur, prev, kind, window_s)
+        measured = telemetry.measured_rates(cur, prev, kind, window_s)
         for b, rt in enumerate(self.runtimes):
             w_b = len(self._lanes[b])
             lane_of = {fid: i for i, fid in enumerate(self._lanes[b])
@@ -544,10 +571,15 @@ class FleetController:
     def _apply_event(self, ev: TenantEvent, ei: int, t0: int,
                      full_cfg: SimConfig, seeds_l: list[int],
                      arr_t, arr_sz, carry, width: int
-                     ) -> tuple[Any, Any, Any, list[int]]:
+                     ) -> tuple[Any, Any, Any, list[int],
+                                list[tuple[int, int]]]:
         """Apply one ARRIVE/DEPART event at a window boundary.  Returns
-        the (possibly updated) arrival buffers, carry and the list of
-        servers whose lane tables must re-pack before the next window."""
+        the (possibly updated) arrival buffers, carry, the list of
+        servers whose lane tables must re-pack before the next window,
+        and the (server, lane) pairs an ARRIVE spliced — the run loop
+        resets those lanes' host-side measurement baseline so the first
+        window's counter delta cannot mix a departed predecessor's
+        totals into the newcomer's measured rate."""
         if ev.kind == DEPART:
             b, lane = self._depart_core(ev.tenant_id)
             # the lane goes dark: no future arrivals, queued-but-unadmitted
@@ -559,7 +591,7 @@ class FleetController:
             self.last_events.append(dict(
                 window=ev.window, kind=DEPART, tenant=ev.tenant_id,
                 server=b, lane=lane))
-            return arr_t, arr_sz, carry, [b]
+            return arr_t, arr_sz, carry, [b], []
 
         # ARRIVE — place, register, splice the lane in
         if any(ev.spec.flow_id in rt.table for rt in self.runtimes):
@@ -572,7 +604,7 @@ class FleetController:
             self.last_events.append(dict(
                 window=ev.window, kind=ARRIVE, tenant=ev.spec.flow_id,
                 server=None, lane=None))
-            return arr_t, arr_sz, carry, []
+            return arr_t, arr_sz, carry, [], []
         b = p.server
         lane = self._lanes[b].index(ev.spec.flow_id)
         if lane >= width:
@@ -603,7 +635,51 @@ class FleetController:
         self.last_events.append(dict(
             window=ev.window, kind=ARRIVE, tenant=ev.spec.flow_id,
             server=b, lane=lane))
-        return arr_t, arr_sz, carry, [b]
+        return arr_t, arr_sz, carry, [b], [(b, lane)]
+
+    # ------------------------------------------------------------------
+    # Control layer: WindowMetrics -> policy decisions -> register plans
+    # ------------------------------------------------------------------
+    def _server_envelopes(self, b: int) -> dict[int, "ctl.Envelope"]:
+        """A server's profiled capacity envelopes, cached per membership
+        version: policies re-read them every window, but the underlying
+        ``ProfileTable.capacity`` lookups only re-run after a lifecycle
+        or path change bumped the runtime's version."""
+        rt = self.runtimes[b]
+        hit = self._envelopes[b]
+        if hit is not None and hit[0] == rt.lifecycle_version:
+            return hit[1]
+        env = ctl.capacity_envelopes(rt)
+        self._envelopes[b] = (rt.lifecycle_version, env)
+        return env
+
+    def _control_decide(self, w: int, wcfg: SimConfig,
+                        reports: list[list]) -> list[bool]:
+        """One measurement -> policy -> actuation step after window ``w``:
+        build each server's ``ServerView`` from the fresh WindowReport
+        metrics, let ``self.control`` decide, and commit plans through
+        ``control.actuate``.  Returns the per-server changed flags (a
+        server whose registers did not change keeps the
+        no-register-rewrite resume path).  ``StaticHold`` short-circuits
+        everything — no envelopes, no margins, no actuation."""
+        pol = self.control
+        B = len(self.runtimes)
+        views = []
+        for b, rt in enumerate(self.runtimes):
+            metrics = reports[b][-1].metrics if reports[b] else {}
+            env = self._server_envelopes(b) if pol.needs_envelopes else {}
+            margin = (self.score_cache.server_margin(b)
+                      if pol.needs_envelopes else None)
+            views.append(ctl.ServerView(server=b, window_s=wcfg.seconds,
+                                        metrics=metrics, envelopes=env,
+                                        margin=margin))
+        plans = pol.decide(w, views)
+        if len(plans) != B:
+            raise ValueError(
+                f"control policy {pol.name!r} returned {len(plans)} plans "
+                f"for {B} servers")
+        return [bool(plan) and ctl.actuate(self.runtimes[b], plan)
+                for b, plan in enumerate(plans)]
 
     def run(self, *, total_ticks: int, window_ticks: int,
             tick_cycles: int = 8,
@@ -644,11 +720,21 @@ class FleetController:
         layout is rejected rather than silently landing traffic on the
         wrong lane.
 
+        After every window (except the last) the controller runs one
+        measurement -> policy -> actuation step: the window's
+        ``WindowMetrics`` feed ``self.control`` (a
+        ``control.ControlPolicy``; default ``StaticHold`` — a bitwise
+        no-op) and committed plans mark their server for a register
+        re-pack; servers whose policies held steady keep the
+        no-register-rewrite resume path.
+
         Returns ``(results, reports)``: one last-window ``SimResult`` per
         server (rows in lane order — see ``lane_map``; with no holes that
-        is sorted-flow-id order; a mid-run arrival always occupies a
-        fresh lane, so each tenant's cumulative lane counters are its
-        own) and one ``list[WindowReport]`` per server."""
+        is sorted-flow-id order; a mid-run arrival occupies a fresh lane
+        — or, with ``reuse_lanes``, a recycled hole whose counters and
+        measurement baseline were reset at splice — so each tenant's
+        cumulative lane counters are its own) and one
+        ``list[WindowReport]`` per server."""
         runtimes = self.runtimes
         B = len(runtimes)
         if B == 0:
@@ -751,14 +837,27 @@ class FleetController:
         # resumes the carry without any register rewrite at all
         dirty = [False] * B
         self._in_run = True
+        self.control.reset()
         try:
             for w, (t0, wcfg) in enumerate(windows):
                 for ei, ev in ev_by_w.get(w, ()):
-                    arr_t, arr_sz, carry, touched = self._apply_event(
-                        ev, ei, t0, full_cfg, seeds_l, arr_t, arr_sz,
-                        carry, width)
+                    arr_t, arr_sz, carry, touched, spliced = \
+                        self._apply_event(ev, ei, t0, full_cfg, seeds_l,
+                                          arr_t, arr_sz, carry, width)
                     for b in touched:
                         dirty[b] = True
+                    # baseline reset: a recycled lane's device counters
+                    # restart from zero (engine.recycle_flow_lane), so
+                    # the host-side previous snapshot must too — else the
+                    # newcomer's first window delta would go negative /
+                    # mix in the departed tenant's totals.  (device_get
+                    # snapshots are read-only views; copy-on-write.)
+                    if prev is not None:
+                        for bb, ll in spliced:
+                            for k, v in prev.items():
+                                if not v.flags.writeable:
+                                    v = prev[k] = v.copy()
+                                v[bb, ll] = 0
                 for b in range(B):
                     if tbss[b] is None or dirty[b]:
                         flowsets[b], masks[b], tbss[b] = \
@@ -769,12 +868,21 @@ class FleetController:
                     flowsets, atabs, links, wcfg, writes, arr_t, arr_sz,
                     t0_ticks=t0, carry=carry, fl_masks=masks)
                 host = jax.device_get({k: carry[k]
-                                       for k in _FLEET_POLL_KEYS})
+                                       for k in telemetry.FLEET_POLL_KEYS})
                 prev = self._fleet_pass(host, prev, wcfg, t0, reports)
                 dirty = [_force_rebuild
                          or bool(reports[b][-1].reconfigured
                                  or reports[b][-1].path_changes)
                          for b in range(B)]
+                if w + 1 < len(windows):
+                    # control layer: metrics -> policy -> actuation (the
+                    # last window has no next window to actuate into; not
+                    # deciding there keeps post-run control state — and
+                    # StaticHold runs entirely — bitwise)
+                    for b, changed in enumerate(
+                            self._control_decide(w, wcfg, reports)):
+                        if changed:
+                            dirty[b] = True
         finally:
             self._in_run = False
         host = jax.device_get({k: carry[k] for k in sim._RESULT_KEYS})

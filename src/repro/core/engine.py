@@ -256,12 +256,25 @@ def recycle_flow_lane(carry: dict, b: int, lane: int) -> dict:
     count is pre-set to INF so the next register write's
     ``min(tokens, bkt_size)`` clamp hands the new tenant a full initial
     bucket (exactly what ``tb.init(start_full=True)`` grants a freshly
-    built carry).  Cumulative hardware counters are deliberately kept:
-    the control plane measures per-window deltas."""
+    built carry).
+
+    The lane's cumulative hardware counters zero too — the measurement
+    baseline reset.  The control plane measures per-window deltas, and a
+    delta straddling the splice would mix the departed tenant's totals
+    into the newcomer's first measured rate (callers must reset their
+    host-side previous-counter snapshot for the lane as well — the
+    controller does).  One residue is documented and accepted: messages
+    the predecessor already pushed into the accelerator/egress queues
+    drain naturally and their completions land on this lane's counters
+    (at most the in-flight queue depth, the same tolerance the depart
+    path's freeze tests allow)."""
     carry = dict(carry)
-    for k in ("q_cnt", "q_head", "arr_ptr", "sw_pend"):
+    for k in ("q_cnt", "q_head", "arr_ptr", "sw_pend",
+              "c_adm_msgs", "c_adm_b_lo", "c_adm_b_hi", "c_done_msgs",
+              "c_done_b_lo", "c_done_b_hi", "c_drops"):
         carry[k] = carry[k].at[b, lane].set(0)
     carry["vft"] = carry["vft"].at[b, lane].set(0.0)
+    carry["c_lat_sum"] = carry["c_lat_sum"].at[b, lane].set(0.0)
     carry["tb"] = carry["tb"]._replace(
         tokens=carry["tb"].tokens.at[b, lane].set(INF_I32))
     return carry

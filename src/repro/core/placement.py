@@ -237,5 +237,16 @@ class ScoreCache:
             (c.entry, c.slo_gbps, c.feasible, c.margin, c.residual,
              c.server_key, c.margin_res))
 
+    def server_margin(self, server: int) -> float | None:
+        """Worst cached SLO-aware margin among a server's scored
+        candidates (``None`` when the server has none) — an advisory
+        tightness signal for the slow control tier
+        (``control.GlobalRetarget``): it intentionally ignores the
+        version guard, since even a slightly stale margin says more
+        about a server's headroom than no signal at all."""
+        margins = [vals[3] for key, (_guard, vals) in self._scores.items()
+                   if key[0] == server]
+        return min(margins) if margins else None
+
     def clear(self) -> None:
         self._scores.clear()

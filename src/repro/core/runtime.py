@@ -30,7 +30,7 @@ from typing import Any, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import placement, sim
+from repro.core import placement, telemetry
 from repro.core import token_bucket as tb
 from repro.core.accelerator import AccelTable, AcceleratorSpec
 from repro.core.flow import (PATH_INGRESS_DIR, FlowSet, FlowSpec, Path,
@@ -56,15 +56,54 @@ class FlowStatus:
     violations: int = 0
     reconfigs: int = 0
     accepted: bool = True
+    streak: int = 0                   # consecutive violated windows (incl.
+                                      # latency-SLO violations, which feed
+                                      # WindowMetrics but never `violations`)
 
 
 @dataclasses.dataclass
 class WindowReport:
+    """One window's Algorithm 1 outcome.
+
+    The legacy fields (``measured`` .. ``path_changes``) keep their
+    exact pre-telemetry semantics; ``metrics`` carries the per-tenant
+    ``telemetry.WindowMetrics`` digest (SLO slack, violation streak,
+    mean latency, per-resource-axis utilization) that control policies
+    and benchmarks consume — one schema instead of each re-deriving
+    from raw counters.  ``to_json`` / ``from_json`` round-trip the whole
+    report."""
+
     t_end_s: float
     measured: dict[int, float]
     violated: list[int]
     reconfigured: list[int]
     path_changes: list[tuple[int, int, int]]
+    metrics: dict[int, telemetry.WindowMetrics] = \
+        dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "t_end_s": self.t_end_s,
+            "measured": {str(k): v for k, v in self.measured.items()},
+            "violated": list(self.violated),
+            "reconfigured": list(self.reconfigured),
+            "path_changes": [list(pc) for pc in self.path_changes],
+            "metrics": {str(k): m.to_json()
+                        for k, m in self.metrics.items()},
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "WindowReport":
+        return WindowReport(
+            t_end_s=float(d["t_end_s"]),
+            measured={int(k): float(v)
+                      for k, v in d.get("measured", {}).items()},
+            violated=[int(f) for f in d.get("violated", [])],
+            reconfigured=[int(f) for f in d.get("reconfigured", [])],
+            path_changes=[tuple(int(x) for x in pc)
+                          for pc in d.get("path_changes", [])],
+            metrics={int(k): telemetry.WindowMetrics.from_json(m)
+                     for k, m in d.get("metrics", {}).items()})
 
 
 class ArcusRuntime:
@@ -268,13 +307,32 @@ class ArcusRuntime:
         ``lane_of`` maps flow id -> dataplane lane index in the counter
         rows; ``None`` means lanes follow sorted-flow-id order (the serial
         layout).  The lifecycle controller passes its persistent layout,
-        which can differ once departures punch holes."""
+        which can differ once departures punch holes.
+
+        Besides the legacy report fields the pass assembles each
+        tenant's ``telemetry.WindowMetrics`` — the measurement layer the
+        control policies consume.  Metrics are derived from the same
+        counter deltas with the same float64 ops, so serial and fleet
+        paths produce identical digests; latency-SLO violations exist
+        only in the metrics (``_slo_ok`` still always passes them),
+        keeping the legacy violated/reconfigured lists bit-stable."""
         measured, violated, reconfigured, path_changes = {}, [], [], []
+        metrics: dict[int, telemetry.WindowMetrics] = {}
+        lat_row = telemetry.mean_latency_s(cur, prev, self.clock_hz)
+        adm_row = telemetry.admitted_gbps(cur, prev, window_s)
         for i, fid in enumerate(sorted(self.table)):
             lane = i if lane_of is None else lane_of[fid]
             st = self.table[fid]
             st.measured = float(measured_row[lane])
             measured[fid] = st.measured
+            util = telemetry.flow_axis_util(
+                st.spec, self.accel_specs[st.spec.accel_id], self.link,
+                float(adm_row[lane]))
+            m = telemetry.flow_metrics(st.spec, lane, st.measured,
+                                       float(lat_row[lane]), st.streak,
+                                       util, self.slo_tol)
+            st.streak = m.streak
+            metrics[fid] = m
             if not self._slo_ok(st):
                 st.violations += 1
                 violated.append(fid)
@@ -287,7 +345,7 @@ class ArcusRuntime:
                         path_changes.append(
                             (fid, old_path, int(st.spec.path)))
         return WindowReport(t_end_s, measured, violated, reconfigured,
-                            path_changes)
+                            path_changes, metrics)
 
     def _slo_ok(self, st: FlowStatus) -> bool:
         """SLOViolationChecker (lines 11-13)."""
@@ -360,36 +418,12 @@ class ArcusRuntime:
 # Fleet-scale managed execution: B client servers, one compiled program
 # ---------------------------------------------------------------------------
 
-#: per-window counter reads (the fleet MMIO poll) — the completion rings
-#: stay on device until the final window, so the control plane's per-window
-#: device_get is a few [B, n_max] arrays, not the multi-megabyte history
-_FLEET_POLL_KEYS = ("c_adm_msgs", "c_adm_b_lo", "c_adm_b_hi", "c_done_msgs",
-                    "c_done_b_lo", "c_done_b_hi", "c_drops", "c_lat_sum")
-
-
-def _fleet_counters(host: dict) -> dict[str, np.ndarray]:
-    """[B, n_max] counter arrays in the exact form serial ``SimResult``
-    counters take (hi/lo byte counters recombined into int64)."""
-    cur = {k: np.asarray(host[k])
-           for k in ("c_adm_msgs", "c_done_msgs", "c_drops", "c_lat_sum")}
-    cur["c_adm_bytes"] = sim.combine_byte_counters(host["c_adm_b_hi"],
-                                                   host["c_adm_b_lo"])
-    cur["c_done_bytes"] = sim.combine_byte_counters(host["c_done_b_hi"],
-                                                    host["c_done_b_lo"])
-    return cur
-
-
-def _measured_rates(cur: dict, prev: dict, kind: np.ndarray,
-                    window_s: float) -> np.ndarray:
-    """SLOViolationChecker measurement (Algorithm 1 lines 11-13),
-    vectorized over trailing flow axes: per-flow achieved rate in the
-    flow's own SLO unit (IOPS or Gbps of ingress payload).  Elementwise
-    float64 — one server's row is bitwise-identical whether computed
-    serially ([n]) or as a fleet slab ([B, n_max])."""
-    meas_iops = (cur["c_done_msgs"] - prev["c_done_msgs"]) / window_s
-    meas_gbps = ((cur["c_done_bytes"] - prev["c_done_bytes"])
-                 * 8 / window_s / 1e9)
-    return np.where(kind == int(SLOKind.IOPS), meas_iops, meas_gbps)
+# The measurement layer lives in ``repro.core.telemetry`` now; these
+# module-level names remain as import-compatible aliases (the fleet MMIO
+# poll keys and the shared counter-delta helpers).
+_FLEET_POLL_KEYS = telemetry.FLEET_POLL_KEYS
+_fleet_counters = telemetry.fleet_counters
+_measured_rates = telemetry.measured_rates
 
 
 def run_managed_batch(runtimes: Sequence[ArcusRuntime], *,

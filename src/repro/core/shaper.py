@@ -61,6 +61,14 @@ def reshape_decision(accel: AcceleratorSpec, slo: SLO, msg_bytes: int,
                      *, clock_hz: float = 250e6,
                      headroom: float = 1.0) -> ShapeDecision:
     """The ReshapeDecision() of Algorithm 1 (line 20)."""
+    if slo.kind == SLOKind.LATENCY:
+        # a latency SLO is enforced by shaping *others* (Sec. 4.3): the
+        # flow's own bucket is a generous device-speed allowance, not a
+        # pacing rate — it must never be the thing queueing messages
+        params = tb.params_for_gbps(accel.peak_gbps * max(headroom, 1.0),
+                                    clock_hz)
+        return ShapeDecision(params, None,
+                             "latency SLO: device-speed allowance")
     note = []
     resize = None
     eff_msg = msg_bytes

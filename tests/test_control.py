@@ -1,0 +1,409 @@
+"""Closed-loop control policies: envelope safety, AIMD dynamics, the
+global re-target tier, actuation semantics, and the telemetry JSON
+schema.
+
+The policy tests fabricate ``WindowMetrics``/``Envelope`` views — no
+engine, no profiling — so the invariants (never leave the profiled
+envelope, monotone convergence on a clear trace, hold-steady returns
+False from ``actuate``) are checked cheaply and exhaustively.  One
+integration test drives a real adaptive ``FleetController`` run and
+asserts the two load-bearing engine contracts: ONE compiled entry for
+the whole adaptive timeline, and hold-steady windows taking the
+no-register-rewrite resume path (pack count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import types
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import control, engine, telemetry
+from repro.core import token_bucket as tb
+from repro.core.accelerator import CATALOG
+from repro.core.controller import FleetController
+from repro.core.flow import SLO, FlowSpec, Path, SLOKind, TrafficPattern
+from repro.core.profiler import ProfileTable
+from repro.core.runtime import ArcusRuntime, WindowReport
+from repro.core.shaper import reshape_decision
+
+_PROFILE_TICKS = 6_000
+
+
+def _metric(fid, *, kind=SLOKind.GBPS, target=8.0, measured=None,
+            violated=False, streak=0, lat=float("nan")):
+    if measured is None:
+        measured = target * (0.5 if violated else 1.2)
+    slack = measured / target - 1.0 if kind != SLOKind.LATENCY \
+        else (1.0 - lat / target if math.isfinite(lat) else float("nan"))
+    return telemetry.WindowMetrics(
+        flow_id=fid, lane=0, kind=int(kind), target=target,
+        measured=float(measured), slack=float(slack), violated=violated,
+        streak=streak, lat_avg_s=float(lat), util=())
+
+
+def _view(metrics, envelopes, *, server=0, margin=None):
+    return control.ServerView(server=server, window_s=1e-3,
+                              metrics=metrics, envelopes=envelopes,
+                              margin=margin)
+
+
+# ---------------------------------------------------------------------------
+# StaticHold
+# ---------------------------------------------------------------------------
+
+
+def test_static_hold_decides_nothing():
+    pol = control.StaticHold()
+    assert pol.needs_envelopes is False
+    views = [_view({0: _metric(0, violated=True)},
+                   {0: control.Envelope(8.0, 20.0)}, server=b)
+             for b in range(3)]
+    assert pol.decide(0, views) == [None, None, None]
+
+
+# ---------------------------------------------------------------------------
+# SlackAIMD
+# ---------------------------------------------------------------------------
+
+
+def _run_aimd(pol, env, violated_seq, *, fid=0):
+    """Feed a violation sequence through one server/one tenant; return
+    the RatePlan sequence."""
+    plans = []
+    for w, bad in enumerate(violated_seq):
+        out = pol.decide(w, [_view({fid: _metric(fid, violated=bad)},
+                                   {fid: env})])
+        plans.append(out[0][fid])
+    return plans
+
+
+def test_aimd_monotone_convergence_on_clear_trace():
+    env = control.Envelope(floor=8.0, ceil=24.0)
+    pol = control.SlackAIMD(ai=0.25)
+    plans = _run_aimd(pol, env, [False] * 8)
+    rates = [p.rate for p in plans]
+    assert all(b >= a for a, b in zip(rates, rates[1:]))   # monotone
+    assert rates[0] == pytest.approx(8.0 + 0.25 * 16.0)    # one AI step
+    assert rates[3] == pytest.approx(env.ceil)             # converged
+    assert all(r == pytest.approx(env.ceil) for r in rates[3:])
+    assert all(p.burst_scale == 1.0 for p in plans)        # never shrank
+
+
+def test_aimd_decrease_on_violation_never_below_floor():
+    env = control.Envelope(floor=8.0, ceil=24.0)
+    pol = control.SlackAIMD(ai=0.25, md=0.5, burst_md=0.5, burst_min=0.05)
+    plans = _run_aimd(pol, env, [False, False, True, True])
+    assert plans[1].rate > plans[2].rate > plans[3].rate
+    assert plans[3].rate >= env.floor
+    # bucket depth decays multiplicatively, floored at burst_min
+    assert plans[2].burst_scale == pytest.approx(0.5)
+    assert plans[3].burst_scale == pytest.approx(0.25)
+    many = _run_aimd(control.SlackAIMD(), env, [True] * 12)
+    assert many[-1].rate == pytest.approx(env.floor)
+    assert many[-1].burst_scale == pytest.approx(0.05)
+
+
+def test_aimd_violated_co_tenant_throttles_the_whole_server():
+    """A latency tenant's violation (no envelope of its own) drives the
+    rate tenants' decrease — shaping *others* is the Fig. 9 mechanism."""
+    env = control.Envelope(floor=8.0, ceil=24.0)
+    pol = control.SlackAIMD(start_frac=1.0)
+    lat_bad = _metric(7, kind=SLOKind.LATENCY, target=1e-6,
+                      violated=True, lat=5e-6)
+    out = pol.decide(0, [_view({0: _metric(0), 7: lat_bad}, {0: env})])
+    assert out[0][0].rate < env.ceil
+    assert out[0][0].burst_scale < 1.0
+
+
+def test_aimd_guard_band_holds_state():
+    """Thin slack without a violation neither ramps nor decays — the
+    plan repeats verbatim (actuate will then report no change)."""
+    env = control.Envelope(floor=8.0, ceil=24.0)
+    pol = control.SlackAIMD(ai=0.25, guard=0.1)
+    p0 = pol.decide(0, [_view({0: _metric(0)}, {0: env})])[0][0]
+    thin = _metric(0, measured=8.4)          # slack 0.05, inside guard
+    p1 = pol.decide(1, [_view({0: thin}, {0: env})])[0][0]
+    assert p1 == p0
+
+
+def test_aimd_no_envelopes_holds_steady():
+    pol = control.SlackAIMD()
+    out = pol.decide(0, [_view({7: _metric(7, violated=True)}, {})])
+    assert out == [None]
+
+
+def test_aimd_rejects_bad_decrease_factors():
+    with pytest.raises(ValueError):
+        control.SlackAIMD(md=0.0)
+    with pytest.raises(ValueError):
+        control.SlackAIMD(burst_md=1.5)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=40),
+       st.floats(min_value=0.1, max_value=100.0),
+       st.floats(min_value=0.0, max_value=400.0),
+       st.floats(min_value=0.01, max_value=1.0),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_aimd_never_leaves_envelope_property(seq, floor, span, ai, md):
+    """Whatever the violation history, the planned rate stays inside the
+    profiled capacity envelope and the bucket scale inside
+    [burst_min, 1]."""
+    env = control.Envelope(floor=floor, ceil=floor + span)
+    pol = control.SlackAIMD(ai=ai, md=md)
+    for p in _run_aimd(pol, env, seq):
+        assert env.floor <= p.rate <= env.ceil + 1e-9
+        assert pol.burst_min - 1e-12 <= p.burst_scale <= 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=30),
+       st.floats(min_value=0.1, max_value=100.0),
+       st.floats(min_value=0.0, max_value=400.0),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_aimd_converges_monotonically_on_steady_trace_property(
+        n, floor, span, ai):
+    """On a violation-free trace the granted rate is non-decreasing and
+    reaches the profiled ceiling within ceil(1/ai) windows."""
+    env = control.Envelope(floor=floor, ceil=floor + span)
+    rates = [p.rate for p in
+             _run_aimd(control.SlackAIMD(ai=ai), env, [False] * n)]
+    assert all(b >= a - 1e-9 for a, b in zip(rates, rates[1:]))
+    if n >= math.ceil(1.0 / ai):
+        assert rates[-1] == pytest.approx(env.ceil)
+
+
+# ---------------------------------------------------------------------------
+# GlobalRetarget
+# ---------------------------------------------------------------------------
+
+
+def test_retarget_shifts_budget_toward_need_and_respects_ceilings():
+    envs = {0: control.Envelope(8.0, 24.0), 1: control.Envelope(8.0, 24.0)}
+    needy = _metric(0, violated=True, measured=4.0, streak=3)
+    happy = _metric(1, violated=False)
+    pol = control.GlobalRetarget(control.SlackAIMD(start_frac=1.0),
+                                 period=4)
+    out = pol.decide(0, [_view({0: needy, 1: happy}, dict(envs))])
+    plans = out[0]
+    # start_frac=1 puts each tenant at its (re-targeted) ceiling: the
+    # needy tenant got the larger share of the grant budget
+    assert plans[0].rate > plans[1].rate
+    assert plans[0].rate <= envs[0].ceil + 1e-9      # never above profile
+    assert plans[1].rate >= envs[1].floor - 1e-9     # never below SLO
+
+
+def test_retarget_only_every_period_windows():
+    envs = {0: control.Envelope(8.0, 24.0), 1: control.Envelope(8.0, 24.0)}
+    pol = control.GlobalRetarget(control.SlackAIMD(start_frac=1.0),
+                                 period=3)
+    needy = _metric(0, violated=True, measured=4.0, streak=2)
+    out0 = pol.decide(0, [_view({0: needy, 1: _metric(1)}, dict(envs))])
+    assert out0[0] is not None
+    ceilings0 = dict(pol._ceilings)
+    # window 1: metrics flip, but ceilings must stay those of window 0
+    # (the inner AIMD keeps ramping inside them)
+    out1 = pol.decide(1, [_view({0: _metric(0), 1: _metric(1)},
+                                dict(envs))])
+    assert dict(pol._ceilings) == ceilings0
+    assert out1[0][0].rate <= ceilings0[(0, 0)] + 1e-9
+    # window 3 (== period) re-targets: even split again
+    pol.decide(3, [_view({0: _metric(0), 1: _metric(1)}, dict(envs))])
+    assert dict(pol._ceilings) != ceilings0
+
+
+def test_retarget_thin_margin_scales_budget_down():
+    envs = {0: control.Envelope(8.0, 24.0)}
+    pol = control.GlobalRetarget(control.SlackAIMD(start_frac=1.0),
+                                 period=4, margin_floor=0.05)
+    # margin 0: the placement layer says the server has no headroom —
+    # the whole grant budget collapses to the SLO floor
+    out = pol.decide(0, [_view({0: _metric(0)}, dict(envs), margin=0.0)])
+    assert out[0][0].rate == pytest.approx(envs[0].floor)
+    # comfortable margin: full budget
+    pol.reset()
+    out = pol.decide(0, [_view({0: _metric(0)}, dict(envs), margin=0.5)])
+    assert out[0][0].rate == pytest.approx(envs[0].ceil)
+
+
+# ---------------------------------------------------------------------------
+# Actuation: plan -> registers
+# ---------------------------------------------------------------------------
+
+
+def _fake_rt(spec):
+    """A minimal runtime stand-in for plan_params/actuate: the real
+    accelerator catalog and planner, no profiling."""
+    params = reshape_decision(CATALOG["synthetic50"], spec.slo,
+                              spec.pattern.msg_bytes, clock_hz=250e6).params
+    st_ = types.SimpleNamespace(spec=spec, params=params, reconfigs=0)
+    rt = types.SimpleNamespace(accel_specs=[CATALOG["synthetic50"]],
+                               clock_hz=250e6,
+                               table={spec.flow_id: st_})
+    return rt, st_
+
+
+def _gbps_spec(fid=0, target=8.0, msg=1024):
+    return FlowSpec(fid, fid, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(msg, load=0.3), SLO.gbps(target))
+
+
+def test_plan_at_floor_reproduces_admission_registers():
+    spec = _gbps_spec()
+    rt, st_ = _fake_rt(spec)
+    admission = st_.params
+    got = control.plan_params(rt, st_, control.RatePlan(rate=8.0))
+    assert got == admission
+
+
+def test_plan_burst_scale_shrinks_bucket_with_clamp():
+    spec = _gbps_spec()
+    rt, st_ = _fake_rt(spec)
+    base = st_.params
+    small = control.plan_params(rt, st_,
+                                control.RatePlan(rate=8.0,
+                                                 burst_scale=0.5))
+    assert small.bkt_size < base.bkt_size
+    assert small.refill_rate == base.refill_rate     # rate untouched
+    tiny = control.plan_params(rt, st_,
+                               control.RatePlan(rate=8.0,
+                                                burst_scale=1e-6))
+    # clamp: one refill quantum and one message always fit
+    assert tiny.bkt_size >= max(base.refill_rate, spec.pattern.msg_bytes)
+
+
+def test_actuate_hold_steady_reports_unchanged():
+    spec = _gbps_spec()
+    rt, st_ = _fake_rt(spec)
+    assert control.actuate(rt, {0: control.RatePlan(rate=8.0)}) is False
+    assert st_.reconfigs == 0
+    assert control.actuate(rt, {0: control.RatePlan(rate=16.0)}) is True
+    assert st_.reconfigs == 1
+    # committing the same plan again is a no-op
+    assert control.actuate(rt, {0: control.RatePlan(rate=16.0)}) is False
+    assert st_.reconfigs == 1
+
+
+def test_actuate_skips_unknown_and_latency_tenants():
+    spec = _gbps_spec()
+    rt, st_ = _fake_rt(spec)
+    lat_spec = FlowSpec(9, 9, Path.FUNCTION_CALL, 0,
+                        TrafficPattern(64, rate_mps=1e6),
+                        SLO.latency(2e-6))
+    lat_params = reshape_decision(CATALOG["synthetic50"], lat_spec.slo,
+                                  64, clock_hz=250e6).params
+    rt.table[9] = types.SimpleNamespace(spec=lat_spec, params=lat_params,
+                                        reconfigs=0)
+    plans = {9: control.RatePlan(rate=50.0),      # latency: never shaped
+             42: control.RatePlan(rate=1.0)}      # unknown fid: ignored
+    assert control.actuate(rt, plans) is False
+    assert rt.table[9].params == lat_params
+
+
+# ---------------------------------------------------------------------------
+# Telemetry JSON schema
+# ---------------------------------------------------------------------------
+
+
+def test_window_metrics_json_roundtrip():
+    m = _metric(3, kind=SLOKind.LATENCY, target=1e-6, measured=0.9,
+                violated=True, streak=2, lat=2.5e-6)
+    m = dataclasses.replace(m, util=(0.5, 0.125))
+    back = telemetry.WindowMetrics.from_json(
+        json.loads(json.dumps(m.to_json())))
+    assert back == m
+
+
+def test_window_metrics_json_roundtrip_nan_latency():
+    m = _metric(1)           # rate SLO: lat_avg_s is NaN
+    back = telemetry.WindowMetrics.from_json(m.to_json())
+    assert math.isnan(back.lat_avg_s)
+    assert dataclasses.replace(back, lat_avg_s=0.0) == \
+        dataclasses.replace(m, lat_avg_s=0.0)
+
+
+def test_window_report_json_roundtrip():
+    rep = WindowReport(
+        t_end_s=1.5e-3,
+        measured={0: 7.5, 3: 12.0},
+        violated=[3],
+        reconfigured=[3],
+        path_changes=[(3, 1, 2)],
+        metrics={0: dataclasses.replace(_metric(0, measured=7.5),
+                                        lat_avg_s=2.0e-6),
+                 3: dataclasses.replace(_metric(3, violated=True),
+                                        lat_avg_s=0.0, util=(0.25,))})
+    back = WindowReport.from_json(json.loads(json.dumps(rep.to_json())))
+    assert back.t_end_s == rep.t_end_s
+    assert back.measured == rep.measured
+    assert back.violated == rep.violated
+    assert back.reconfigured == rep.reconfigured
+    assert back.path_changes == rep.path_changes
+    assert back.metrics == rep.metrics
+
+
+# ---------------------------------------------------------------------------
+# Integration: adaptive run — one engine entry, hold-steady resume path
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_ctrl(profile):
+    rts = [ArcusRuntime([CATALOG["synthetic50"]], profile_table=profile)]
+    ctrl = FleetController(rts, control=control.SlackAIMD(ai=0.5))
+    spec = FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(1024, load=0.3, process="poisson"),
+                    SLO.gbps(4.0))
+    assert ctrl.admit_fleet([[spec]]) == [[True]]
+    return ctrl
+
+
+def test_adaptive_run_one_engine_entry_and_hold_steady_packs(monkeypatch):
+    """An adaptive timeline compiles ONE engine entry, and once the AIMD
+    ramp converges (params stop changing) the remaining windows take the
+    no-register-rewrite resume path — no pack, no rewrite."""
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+    kwargs = dict(total_ticks=18_000, window_ticks=3_000, seeds=[1],
+                  load_ref_gbps=[{0: 32.0}])
+    # warm admission + envelope contexts on a throwaway clone
+    _adaptive_ctrl(profile).run(**kwargs)
+
+    ctrl = _adaptive_ctrl(profile)
+    rt = ctrl.runtimes[0]
+    env = control.capacity_envelopes(rt)
+    assert env[0].floor == pytest.approx(4.0)        # SLO-required rate
+    assert env[0].ceil > env[0].floor                # profiled headroom
+
+    packs = []
+    real_pack = tb.pack
+    monkeypatch.setattr(tb, "pack", lambda ps: packs.append(1) or
+                        real_pack(ps))
+    engine.cache_clear()
+    _results, reports = ctrl.run(**kwargs)
+    assert engine.cache_info() == {"entries": 1, "traces": 1}
+
+    n_windows = len(reports[0])
+    assert n_windows == 6
+    # the lightly-loaded tenant never trips the legacy loop
+    assert all(not w.reconfigured and not w.path_changes
+               for w in reports[0])
+    # packs: window 0 always packs; window w>0 packs iff the policy
+    # changed registers after window w-1 (== one reconfig bump)
+    assert len(packs) == 1 + rt.table[0].reconfigs, (len(packs),
+                                                     rt.table[0].reconfigs)
+    # ai=0.5 on a clear trace converges in 2 steps: later windows must
+    # hold steady (the resume path) — strictly fewer packs than windows
+    assert 1 <= rt.table[0].reconfigs <= 2
+    assert len(packs) < n_windows
+    # converged shaped rate sits at the profiled ceiling, so measured
+    # throughput never dropped below the (met) SLO along the way
+    assert all(not np.isnan(w.metrics[0].measured) for w in reports[0])
+    assert all(not w.metrics[0].violated for w in reports[0])

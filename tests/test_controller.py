@@ -77,6 +77,16 @@ def test_controller_static_run_matches_serial_bitwise():
             assert ws.measured == wb.measured
             assert ws.violated == wb.violated
             assert ws.reconfigured == wb.reconfigured
+            # the telemetry digest agrees too (NaN-aware: frozen
+            # dataclass == fails on NaN fields)
+            assert set(ws.metrics) == set(wb.metrics)
+            for fid in ws.metrics:
+                ms, mb = ws.metrics[fid], wb.metrics[fid]
+                np.testing.assert_equal(ms.lat_avg_s, mb.lat_avg_s)
+                np.testing.assert_equal(ms.slack, mb.slack)
+                assert (dataclasses.replace(ms, lat_avg_s=0.0, slack=0.0)
+                        == dataclasses.replace(mb, lat_avg_s=0.0,
+                                               slack=0.0))
         for fid in rts_s[b].table:
             assert rts_s[b].table[fid].params == rts_c[b].table[fid].params
             assert (rts_s[b].table[fid].violations
@@ -274,6 +284,56 @@ def test_churn_timeline_single_engine_entry_and_no_clean_repacks(
     # the departed tenant shows in reports only before its window
     for w, rep in enumerate(reports[1]):
         assert (1 in rep.measured) == (w < 3)
+
+
+def test_reuse_lanes_recycled_lane_resets_measurement_baseline():
+    """With ``reuse_lanes=True`` a mid-run arrival refills a departed
+    tenant's lane — and the recycled lane's measurement baseline resets
+    at the splice (device counters zeroed by ``recycle_flow_lane``, the
+    host's prev-poll rows zeroed by the controller), so the newcomer's
+    first-window measured rate and final per-lane counters contain only
+    its own traffic, not the predecessor's cumulative totals."""
+    profile = ProfileTable(n_ticks=_PROFILE_TICKS)
+    events = [TenantEvent.depart(2, tenant_id=1),
+              TenantEvent.arrive(3, _spec(102, 4.0, load=0.3),
+                                 accel_name="synthetic50")]
+    kwargs = dict(total_ticks=15_000, window_ticks=3_000, seeds=[1],
+                  load_ref_gbps=[{0: 32.0, 1: 32.0}])
+
+    def build():
+        rts = _mk_fleet((["synthetic50"],), profile)
+        ctrl = FleetController(rts, reuse_lanes=True)
+        acc = ctrl.admit_fleet([[_spec(0, 4.0, load=0.3),
+                                 _spec(1, 4.0, load=0.3)]])
+        assert acc == [[True, True]]
+        return ctrl
+
+    build().run(events=events, **kwargs)         # warm the contexts
+    ctrl = build()
+    results, reports = ctrl.run(events=events, **kwargs)
+
+    dep = next(e for e in ctrl.last_events if e["kind"] == "depart")
+    arr = next(e for e in ctrl.last_events if e["kind"] == "arrive")
+    assert arr["server"] == dep["server"] == 0
+    assert arr["lane"] == dep["lane"]            # the hole was recycled
+    lane = arr["lane"]
+
+    # the newcomer's measured rate is its own traffic: ~9.6 Gbps of
+    # injected load, not the predecessor's cumulative totals replayed
+    # through the delta (and never negative / zero from a stale prev row)
+    for w in (3, 4):
+        got = reports[0][w].measured[102]
+        assert 2.0 < got < 16.0, (w, got)
+        m = reports[0][w].metrics[102]
+        assert m.lane == lane and m.measured == got
+
+    # final per-lane counters: tenant 0 injected for all 5 windows at the
+    # same load; the recycled lane saw only the newcomer's 2 windows —
+    # without the baseline reset it would also carry the predecessor's
+    # 2 windows (~0.8x of tenant 0), which the bound rejects
+    adm = results[0].counters["c_adm_msgs"]
+    assert adm[lane] > 0
+    assert adm[lane] < 0.6 * adm[0], (adm[lane], adm[0])
 
 
 def test_depart_between_runs_reuses_engine_entry_then_repacks():
