@@ -36,7 +36,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, Timer, save_json, us_per_tick
+from benchmarks.common import (Row, Timer, save_json, tail_latency_us,
+                               us_per_tick)
 from repro.core import control, engine
 from repro.core.accelerator import CATALOG, AcceleratorSpec, CURVE_LINEAR
 from repro.core.controller import FleetController, TenantEvent
@@ -209,12 +210,11 @@ def _run_fig9(profile: ProfileTable, policy: control.ControlPolicy,
     # arms and would otherwise dominate the tail of both — the
     # comparison is about the steady state the policy converges to
     sel = (res.comp_flow == 0) & (res.comp_t_s >= 0.4 * res.seconds)
-    lat = np.sort(res.comp_lat_s[sel])
+    tails = tail_latency_us(res.comp_lat_s[sel], qs=(99,))
     out = dict(
         wall_s=t.s, policy=policy.name,
-        vm1_avg_us=float(np.mean(lat) * 1e6) if len(lat) else float("nan"),
-        vm1_p99_us=float(np.percentile(lat, 99) * 1e6) if len(lat)
-        else float("nan"),
+        vm1_avg_us=tails["mean_us"],
+        vm1_p99_us=tails["p99_us"],
         vm2_gbps=float(np.mean([w.metrics[1].measured
                                 for w in reports[0][1:]])),
         lat_violations=_lat_violations(reports))

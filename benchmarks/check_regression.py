@@ -45,7 +45,15 @@ perf trajectory artifact CI uploads for every PR:
     churn arm — counts matching the committed baseline exactly, the
     arm's config is mode-independent — and a strictly better VM1 tail
     on the Fig. 9 arm with VM2 held at its SLO), with every timed run
-    still ONE compiled engine entry.
+    still ONE compiled engine entry;
+  * (when ``--pr-scenarios``/``--baseline-scenarios`` are given) the
+    production-shaped workload-scenario gate over the fixed named
+    scenarios (MMPP / heavy-tail / diurnal+corrburst / flash crowd /
+    adversarial prober): per-arm SLO-violation counts and lifecycle
+    decisions must match the committed baseline exactly, reference
+    variance must stay within 0.5 percentage points, the adversarial
+    probe's holds-under-1% verdicts must not flip, and every scenario
+    must ride ONE compiled engine entry across both control arms.
 
 Usage:
     python -m benchmarks.check_regression \
@@ -245,6 +253,63 @@ def summarize_adaptive(pr: dict, baseline: dict) -> dict:
     }
 
 
+def summarize_scenarios(pr: dict, baseline: dict) -> dict:
+    """Workload-scenario gate over the fixed named-scenario timelines
+    (mode-independent, so the committed baseline gates smoke runs
+    exactly): per-arm SLO-violation window counts and lifecycle
+    decisions are deterministic — any drift means a PR changed a
+    generator's rng stream, a scenario's tenant mix, or shaping
+    behavior; every scenario must still ride ONE compiled engine entry
+    across BOTH control arms, the reference tenants' cross-server
+    deviation must stay within 0.5 percentage points of the baseline,
+    and the adversarial probe's holds-under-1% verdicts must not flip
+    silently."""
+    drift: dict = {}
+    dev: dict = {}
+    one_entry = True
+    prs, bases = pr["scenarios"], baseline["scenarios"]
+    for name in sorted(set(prs) | set(bases)):
+        if name not in prs or name not in bases:
+            drift[name] = {"missing_in": ("pr" if name not in prs
+                                          else "baseline")}
+            continue
+        p, b = prs[name], bases[name]
+        bad = {}
+        for arm in ("static", "adaptive"):
+            if p[arm]["violations"] != b[arm]["violations"]:
+                bad[f"{arm}_violations"] = [p[arm]["violations"],
+                                            b[arm]["violations"]]
+            if p[arm]["decisions"] != b[arm]["decisions"]:
+                bad[f"{arm}_decisions"] = [p[arm]["decisions"],
+                                           b[arm]["decisions"]]
+        if bad:
+            drift[name] = bad
+        dev[name] = {
+            "ref_dev_max_pct": p["static"]["ref_dev_max_pct"],
+            "baseline_pct": b["static"]["ref_dev_max_pct"],
+            "ok": abs(p["static"]["ref_dev_max_pct"]
+                      - b["static"]["ref_dev_max_pct"]) <= 0.5,
+        }
+        one_entry &= p["engine_entries"] == 1
+    probe_ok = True
+    if pr.get("adversarial") and baseline.get("adversarial"):
+        probe_ok = all(
+            pr["adversarial"][k] == baseline["adversarial"][k]
+            for k in ("holds_under_1pct_static",
+                      "holds_under_1pct_adaptive"))
+    return {
+        "violations": {name: {arm: prs[name][arm]["violations"]
+                              for arm in ("static", "adaptive")}
+                       for name in prs},
+        "decision_drift_vs_baseline": drift,
+        "ref_deviation": dev,
+        "adversarial_verdicts_stable": probe_ok,
+        "one_engine_entry": one_entry,
+        "ok": (not drift and one_entry and probe_ok
+               and all(d["ok"] for d in dev.values())),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pr", required=True,
@@ -267,6 +332,10 @@ def main() -> None:
                     help="adaptive.json from this PR's smoke run")
     ap.add_argument("--baseline-adaptive", default=None,
                     help="committed benchmarks/results/adaptive.json")
+    ap.add_argument("--pr-scenarios", default=None,
+                    help="scenarios.json from this PR's smoke run")
+    ap.add_argument("--baseline-scenarios", default=None,
+                    help="committed benchmarks/results/scenarios.json")
     ap.add_argument("--out", default="BENCH_pr.json")
     ap.add_argument("--max-slowdown", type=float, default=2.0)
     args = ap.parse_args()
@@ -289,6 +358,10 @@ def main() -> None:
     if bool(args.pr_adaptive) != bool(args.baseline_adaptive):
         ap.error("--pr-adaptive and --baseline-adaptive must be given "
                  "together (one alone would silently skip the adaptive "
+                 "gate)")
+    if bool(args.pr_scenarios) != bool(args.baseline_scenarios):
+        ap.error("--pr-scenarios and --baseline-scenarios must be given "
+                 "together (one alone would silently skip the scenarios "
                  "gate)")
     out = summarize(pr, baseline, args.max_slowdown)
     if args.pr_placement and args.baseline_placement:
@@ -316,13 +389,20 @@ def main() -> None:
         with open(args.baseline_adaptive) as f:
             base_adapt = json.load(f)
         out["adaptive"] = summarize_adaptive(pr_adapt, base_adapt)
+    if args.pr_scenarios and args.baseline_scenarios:
+        with open(args.pr_scenarios) as f:
+            pr_scen = json.load(f)
+        with open(args.baseline_scenarios) as f:
+            base_scen = json.load(f)
+        out["scenarios"] = summarize_scenarios(pr_scen, base_scen)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))
     ok = (out["ok"] and out.get("placement", {}).get("ok", True)
           and out.get("churn", {}).get("ok", True)
           and out.get("contention", {}).get("ok", True)
-          and out.get("adaptive", {}).get("ok", True))
+          and out.get("adaptive", {}).get("ok", True)
+          and out.get("scenarios", {}).get("ok", True))
     if not out["ok"]:
         print(f"FAIL: cached rerun {out['cached_rerun_us_per_tick']:.1f} "
               f"us/tick is {out['slowdown_vs_baseline_x']:.2f}x the "
@@ -345,6 +425,12 @@ def main() -> None:
               "StaticHold, churn violation counts drifted, or a timed "
               "run stopped being one compiled engine entry: "
               f"{out['adaptive']}", file=sys.stderr)
+    if not out.get("scenarios", {}).get("ok", True):
+        print("FAIL: scenarios gate — violation counts / lifecycle "
+              "decisions drifted, reference variance moved, the "
+              "adversarial verdicts flipped, or a scenario stopped "
+              "being one compiled engine entry: "
+              f"{out['scenarios']}", file=sys.stderr)
     if not ok:
         sys.exit(1)
     print(f"OK: cached rerun within {args.max_slowdown}x of baseline "
@@ -362,7 +448,9 @@ def main() -> None:
              "; adaptive beats static "
              f"(-{out['adaptive']['churn_gain_static_minus_adaptive']} "
              "violation windows, fig9 p99 "
-             f"{out['adaptive']['fig9_p99_improvement_x']:.2f}x)"))
+             f"{out['adaptive']['fig9_p99_improvement_x']:.2f}x)")
+          + ("" if "scenarios" not in out else
+             "; workload scenarios stable"))
 
 
 if __name__ == "__main__":

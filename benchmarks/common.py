@@ -14,6 +14,8 @@ import os
 import time
 from typing import Any
 
+import numpy as np
+
 #: JSON artifacts land here; CI points REPRO_BENCH_RESULTS somewhere else so
 #: a smoke run never overwrites the committed baselines it is compared to
 RESULTS_DIR = os.environ.get(
@@ -55,3 +57,25 @@ class Timer:
 
 def us_per_tick(wall_s: float, n_ticks: int) -> float:
     return wall_s / max(n_ticks, 1) * 1e6
+
+
+def tail_latency_us(lat_s, qs: tuple[float, ...] = (50, 99, 99.9)
+                    ) -> dict[str, float]:
+    """Tail-latency summary of a completion-latency sample, in us.
+
+    Returns ``{"p50_us": ..., "p99_us": ..., "p999_us": ...}`` (keys
+    derived from ``qs``: the percentile with dots stripped) plus
+    ``mean_us`` and ``n`` — NaN when the sample is empty.  One shared
+    derivation so every benchmark's percentile math (interpolation mode
+    included) is the same."""
+    lat = np.asarray(lat_s, dtype=float)
+    out: dict[str, float] = {"n": int(lat.size)}
+    keys = ["p" + f"{q:g}".replace(".", "") + "_us" for q in qs]
+    if lat.size == 0:
+        out["mean_us"] = float("nan")
+        out.update({k: float("nan") for k in keys})
+        return out
+    out["mean_us"] = float(np.mean(lat) * 1e6)
+    for q, key in zip(qs, keys):
+        out[key] = float(np.percentile(lat, q) * 1e6)
+    return out

@@ -23,6 +23,7 @@ MODULES = [
     "churn",                     # tenant-lifecycle churn timelines
     "contention",                # multi-resource vector admission
     "adaptive",                  # closed-loop shaping vs static registers
+    "scenarios",                 # production-shaped workload scenarios
     "table2_shaping_accuracy",   # Table 2
     "fig3_provisioning",         # Fig. 3 / Table 1
     "fig6_throughput_cdf",       # Fig. 6 + Sec 5.2 latency

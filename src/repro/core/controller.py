@@ -535,6 +535,15 @@ class FleetController:
                 s[i] = 0
         return t, s
 
+    def layout_arrivals(self, server: int, cfg: SimConfig, seed: int,
+                        ref: dict[int, float] | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Full-horizon arrival traces for one server in lane order — the
+        exact rows ``run`` would generate itself from ``seeds``.  The
+        public seam for replayable scenarios (``repro.workloads``): emit
+        once, save, and pass back through ``run(arrivals=...)``."""
+        return self._layout_arrivals(server, cfg, seed, ref)
+
     def _fleet_pass(self, host: dict, prev: dict | None, cfg: SimConfig,
                     t0_ticks: int, reports: list[list]) -> dict:
         """One fleet-wide Algorithm 1 pass between engine windows.
@@ -800,16 +809,18 @@ class FleetController:
         M = max(t.shape[1] for t, _ in arrivals)
         # reserve trace columns for event tenants too: an arriving spec
         # can inject faster than any incumbent, and its spliced row must
-        # fit the committed [B, width, M] buffers (gen_arrivals caps a
-        # flow at ceil(rate * horizon) + 16 messages)
+        # fit the committed [B, width, M] buffers (``sim.trace_budget``
+        # caps a flow at ceil(rate * burst_factor * horizon) + 16
+        # messages — the burst factor covers registered processes whose
+        # peak rate exceeds their mean)
         for ev in events:
             if ev.kind != ARRIVE or ev.spec is None:
                 continue
             horizon_s = ((total_ticks - ev.window * window_ticks)
                          * tick_cycles / cfg.clock_hz)
-            rate = ev.spec.pattern.rate_msgs_per_sec(
-                32.0 if ev.ref_gbps is None else ev.ref_gbps)
-            M = max(M, int(np.ceil(max(rate, 1e-9) * horizon_s)) + 16)
+            rate = max(ev.spec.pattern.rate_msgs_per_sec(
+                32.0 if ev.ref_gbps is None else ev.ref_gbps), 1e-9)
+            M = max(M, sim.trace_budget(ev.spec.pattern, rate, horizon_s))
         arr_t_np = np.full((B, width, M), INF_I32, np.int32)
         arr_sz_np = np.zeros_like(arr_t_np)
         for b, (t, s) in enumerate(arrivals):

@@ -64,19 +64,35 @@ class TrafficPattern:
     msg_bytes: int = 1024
     load: float = 0.5
     rate_mps: float | None = None
-    process: str = "cbr"  # cbr | poisson | onoff | bimodal
+    # any name in the sim's arrival-process registry (``cbr``, ``poisson``
+    # and ``onoff`` ship built-in; ``repro.workloads.generators`` registers
+    # the production-shaped set: mmpp, heavytail, diurnal, corrburst,
+    # flash, adversarial)
+    process: str = "cbr"
     # onoff: bursts of `burst_len` back-to-back msgs separated by idle gaps.
     burst_len: int = 32
     duty: float = 0.25
     # bimodal: alternate msg sizes (secondary size, probability)
     msg_bytes2: int = 0
     p2: float = 0.0
+    # extra (name, value) pairs for registered processes that need knobs
+    # beyond the fields above (MMPP state rates, Pareto shape, diurnal
+    # period, ...).  A tuple of pairs keeps the dataclass frozen/hashable;
+    # the empty default leaves every existing pattern bit-identical.
+    params: tuple = ()
 
     def rate_msgs_per_sec(self, line_gbps: float) -> float:
         if self.rate_mps is not None:
             return self.rate_mps
         line_bps = line_gbps * 1e9 / 8.0
         return self.load * line_bps / max(self.msg_bytes, 1)
+
+    def param(self, name: str, default=None):
+        """Look up one ``params`` knob by name (first match wins)."""
+        for k, v in self.params:
+            if k == name:
+                return v
+        return default
 
 
 # ---------------------------------------------------------------------------

@@ -47,6 +47,103 @@ from repro.core.interconnect import LinkSpec
 # ---------------------------------------------------------------------------
 # Arrival-trace generation (host side, numpy — vectorized over flows)
 # ---------------------------------------------------------------------------
+#
+# Arrival processes are pluggable: ``register_process`` maps a
+# ``TrafficPattern.process`` name to a gap generator, so workload packages
+# (``repro.workloads.generators``) add production-shaped processes without
+# editing this module.  The built-in cbr/poisson/onoff handlers below
+# reproduce the pre-registry vectorized code byte-for-byte: handlers run in
+# REGISTRATION order and draw from the one shared ``rng`` stream, so a
+# FlowSet containing only built-in processes consumes the exact same random
+# numbers as before (the pinned same-seed trace digests gate this).
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """One registered arrival process.
+
+    ``gaps(pats, rates, rng, M0, horizon_s)`` receives the subset of
+    patterns using this process (flow order), their nominal mean rates
+    (msgs/s), the shared generator, the trace width and the horizon in
+    seconds.  It returns inter-arrival gaps ``[k, M0]`` in seconds — or a
+    ``(gaps, sizes)`` tuple when the process also draws message sizes
+    (``sizes`` int64 bytes ``[k, M0]``; ``None`` keeps the default
+    msg_bytes/bimodal sizing).
+
+    ``budget(pattern, rate, horizon_s)`` returns the message-budget factor
+    vs the nominal ``rate * horizon`` count — a bursty process whose peak
+    rate exceeds its mean must claim the extra columns here or its trace
+    is silently truncated at the nominal budget.
+    """
+
+    name: str
+    gaps: "callable"
+    budget: "callable | float" = 1.0
+
+    def budget_factor(self, pattern, rate: float, horizon_s: float) -> float:
+        if callable(self.budget):
+            return float(self.budget(pattern, rate, horizon_s))
+        return float(self.budget)
+
+
+#: name -> ArrivalProcess, in registration order (= handler draw order)
+_PROCESSES: dict[str, ArrivalProcess] = {}
+
+
+def register_process(name: str, gaps, *, budget=1.0,
+                     replace: bool = False) -> ArrivalProcess:
+    """Register an arrival process for ``TrafficPattern(process=name)``.
+
+    Handlers draw from ``gen_arrivals``'s shared rng in registration
+    order, so registering a new process never perturbs the random stream
+    of traces that do not use it (pinned same-seed digests stay pinned).
+    Re-registering an existing name raises unless ``replace`` is set."""
+    if name in _PROCESSES and not replace:
+        raise ValueError(f"arrival process {name!r} is already registered "
+                         "(pass replace=True to override)")
+    proc = ArrivalProcess(name, gaps, budget)
+    _PROCESSES[name] = proc
+    return proc
+
+
+def registered_processes() -> tuple[str, ...]:
+    """Registered process names, in registration (= draw) order."""
+    return tuple(_PROCESSES)
+
+
+def _cbr_gaps(pats, rates, rng, M0, horizon_s):
+    return np.broadcast_to(1.0 / rates[:, None], (len(pats), M0))
+
+
+def _poisson_gaps(pats, rates, rng, M0, horizon_s):
+    return rng.exponential(1.0, (len(pats), M0)) / rates[:, None]
+
+
+def _onoff_gaps(pats, rates, rng, M0, horizon_s):
+    col = np.arange(M0)
+    bl = np.array([p.burst_len for p in pats])[:, None]
+    duty = np.array([p.duty for p in pats])[:, None]
+    period = bl / rates[:, None]
+    on_gap = duty * period / bl
+    # idle gap closes each burst so the average rate stays `rate`
+    idle = (col[None, :] % bl) == bl - 1
+    return on_gap + idle * (1 - duty) * period
+
+
+register_process("cbr", _cbr_gaps)
+register_process("poisson", _poisson_gaps)
+register_process("onoff", _onoff_gaps)
+
+
+def trace_budget(pattern, rate: float, horizon_s: float) -> int:
+    """Message-column budget for one flow's trace: the nominal
+    ``ceil(rate * horizon) + 16`` scaled by the process's declared burst
+    factor.  Shared by ``gen_arrivals`` and the controller's mid-run
+    ARRIVE reservation so spliced bursty tenants are never truncated."""
+    proc = _PROCESSES.get(pattern.process)
+    fac = 1.0 if proc is None else proc.budget_factor(pattern, rate,
+                                                      horizon_s)
+    return int(np.ceil(max(rate, 1e-9) * fac * horizon_s)) + 16
 
 
 def gen_arrivals(flows: FlowSet, cfg: SimConfig, *, seed: int = 0,
@@ -65,36 +162,39 @@ def gen_arrivals(flows: FlowSet, cfg: SimConfig, *, seed: int = 0,
     refs = np.array([(load_ref_gbps or {}).get(i, 32.0) for i in range(N)])
     rates = np.array([max(p.rate_msgs_per_sec(r), 1e-9)
                       for p, r in zip(pats, refs)])
+    procs = np.array([p.process for p in pats])
+    unknown = sorted(set(procs) - set(_PROCESSES))
+    if unknown:
+        raise ValueError(
+            f"unknown arrival process(es) {unknown}; registered: "
+            f"{sorted(_PROCESSES)} (workload processes register via "
+            "repro.core.sim.register_process — import "
+            "repro.workloads.generators for the production-shaped set)")
     # dense [N, M0] generation sized by the fastest flow: slow rows draw
     # more randomness than their m_i needs, but flow counts here are small
     # (tens) and M0 is capped by max_msgs, so the vectorization win
-    # dominates the over-draw
+    # dominates the over-draw.  Burst-factor 1.0 (every built-in process)
+    # keeps ``rates * fac`` float-identical to the pre-registry budget.
+    fac = np.array([_PROCESSES[p.process].budget_factor(p, r, horizon_s)
+                    for p, r in zip(pats, rates)])
     ms = np.minimum(max_msgs,
-                    np.ceil(rates * horizon_s) + 16).astype(np.int64)
+                    np.ceil(rates * fac * horizon_s) + 16).astype(np.int64)
     M0 = int(max(1, ms.max()))
     col = np.arange(M0)
 
-    procs = np.array([p.process for p in pats])
-    unknown = set(procs) - {"cbr", "poisson", "onoff"}
-    if unknown:
-        raise ValueError(unknown.pop())
     gaps = np.empty((N, M0))
-    is_cbr = procs == "cbr"
-    is_poi = procs == "poisson"
-    is_onoff = procs == "onoff"
-    if is_cbr.any():
-        gaps[is_cbr] = 1.0 / rates[is_cbr, None]
-    if is_poi.any():
-        gaps[is_poi] = rng.exponential(1.0, (int(is_poi.sum()), M0)) \
-            / rates[is_poi, None]
-    if is_onoff.any():
-        bl = np.array([p.burst_len for p in pats])[is_onoff, None]
-        duty = np.array([p.duty for p in pats])[is_onoff, None]
-        period = bl / rates[is_onoff, None]
-        on_gap = duty * period / bl
-        # idle gap closes each burst so the average rate stays `rate`
-        idle = (col[None, :] % bl) == bl - 1
-        gaps[is_onoff] = on_gap + idle * (1 - duty) * period
+    size_over: dict[int, np.ndarray] = {}
+    for name, proc in _PROCESSES.items():
+        idx = np.flatnonzero(procs == name)
+        if idx.size == 0:
+            continue
+        out = proc.gaps([pats[i] for i in idx], rates[idx], rng, M0,
+                        horizon_s)
+        g, sz = out if isinstance(out, tuple) else (out, None)
+        gaps[idx] = g
+        if sz is not None:
+            for j, i in enumerate(idx):
+                size_over[i] = sz[j]
 
     t = np.cumsum(gaps, axis=1) * cfg.clock_hz
     sizes = np.broadcast_to(
@@ -107,6 +207,8 @@ def gen_arrivals(flows: FlowSet, cfg: SimConfig, *, seed: int = 0,
         sz2 = np.array([p.msg_bytes2 for p in pats], np.int64)[bim, None]
         sizes[bim] = np.where(mask, np.broadcast_to(sz2, mask.shape),
                               sizes[bim])
+    for i, sz in size_over.items():
+        sizes[i] = np.maximum(sz, 1)
 
     valid = (t < horizon_cycles) & (col[None, :] < ms[:, None])
     M = int(max(1, valid.sum(axis=1).max()))

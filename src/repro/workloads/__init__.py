@@ -1,0 +1,19 @@
+"""Production-shaped workload subsystem.
+
+``repro.workloads.generators`` registers the production-shaped arrival
+processes (MMPP, heavy-tailed sizes, diurnal, correlated cross-tenant
+bursts, flash crowds, adversarial token-bucket probing) into the sim's
+arrival-process registry; ``repro.workloads.scenarios`` composes them
+into named, replayable fleet scenarios.
+
+Importing this package is enough to make every generator available to
+``TrafficPattern(process=...)`` across all existing entry points
+(``gen_arrivals`` / ``stack_arrivals`` / ``run_system_batch`` /
+``FleetController.run``).
+"""
+from repro.workloads import generators  # noqa: F401 (registers processes)
+from repro.workloads.scenarios import (SCENARIOS,  # noqa: F401
+                                       BuiltScenario, ScenarioSpec,
+                                       get_scenario, load_trace,
+                                       register_scenario, save_trace,
+                                       scenario_names)

@@ -1,0 +1,299 @@
+"""Workload subsystem: arrival-process registry, production-shaped
+generators (same-seed digests pinned), scenario registry + build
+determinism, and the replayable trace round-trip."""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import sim
+from repro.core.flow import SLO, FlowSet, FlowSpec, Path, TrafficPattern
+from repro.core.profiler import ProfileTable
+from repro.core.sim import SimConfig, gen_arrivals
+from repro import workloads as wl
+from repro.workloads.generators import make_trace
+
+_PROFILE_TICKS = 8_000
+
+_CLOCK = 250e6
+_TICKS = 20_000          # 640 us horizon at the default 8 cycles/tick
+_HORIZON_S = _TICKS * 8 / _CLOCK
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return ProfileTable(n_ticks=_PROFILE_TICKS)
+
+
+# ---------------------------------------------------------------------------
+# Arrival-process registry (the sim-side extension point)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_process_raises_listing_registry():
+    spec = FlowSpec(0, 0, Path.FUNCTION_CALL, 0,
+                    TrafficPattern(1024, load=0.3, process="nope"),
+                    SLO.gbps(10))
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        gen_arrivals(FlowSet.build([spec]), SimConfig(n_ticks=1000))
+    with pytest.raises(ValueError, match="mmpp"):   # lists the registry
+        gen_arrivals(FlowSet.build([spec]), SimConfig(n_ticks=1000))
+
+
+def test_register_process_duplicate_raises():
+    def gaps(pats, rates, rng, M0, horizon_s):
+        return np.full((len(pats), M0), 1.0)
+    sim.register_process("__testproc__", gaps)
+    assert "__testproc__" in sim.registered_processes()
+    with pytest.raises(ValueError, match="already registered"):
+        sim.register_process("__testproc__", gaps)
+    sim.register_process("__testproc__", gaps, replace=True)
+
+
+def test_workloads_import_registers_generators():
+    names = sim.registered_processes()
+    for name in ("cbr", "poisson", "onoff", "mmpp", "heavytail",
+                 "diurnal", "corrburst", "flash", "adversarial"):
+        assert name in names, names
+
+
+def test_traffic_pattern_param_lookup():
+    pat = TrafficPattern(1024, params=(("alpha", 1.5), ("dist", "pareto")))
+    assert pat.param("alpha") == 1.5
+    assert pat.param("dist") == "pareto"
+    assert pat.param("missing") is None
+    assert pat.param("missing", 7) == 7
+
+
+# ---------------------------------------------------------------------------
+# Same-seed digests: every production-shaped generator pinned
+# ---------------------------------------------------------------------------
+
+
+def _digest(t: np.ndarray, s: np.ndarray):
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(t.astype("<i4")).tobytes())
+    h.update(np.ascontiguousarray(s.astype("<i4")).tobytes())
+    return t.shape, h.hexdigest()
+
+
+def _generator_patterns() -> list[TrafficPattern]:
+    return [
+        TrafficPattern(1024, load=0.3, process="mmpp",
+                       params=(("states", (0.25, 2.5)),)),
+        TrafficPattern(1024, load=0.3, process="heavytail",
+                       params=(("dist", "pareto"), ("alpha", 1.5))),
+        TrafficPattern(1024, load=0.3, process="heavytail",
+                       params=(("dist", "lognormal"), ("sigma", 1.0))),
+        TrafficPattern(1024, load=0.3, process="diurnal",
+                       params=(("amp", 0.8),)),
+        TrafficPattern(1024, load=0.3, process="corrburst",
+                       params=(("group", 3), ("burst_hz", 50_000.0),
+                               ("burst_len", 8))),
+        TrafficPattern(1024, load=0.3, process="flash",
+                       params=(("at", 0.3), ("mult", 6.0))),
+        TrafficPattern(1024, rate_mps=5e5, process="adversarial",
+                       params=(("bucket_bytes", 32 * 1024),
+                               ("period_s", 96e-6))),
+    ]
+
+
+def test_generator_same_seed_digests_pinned():
+    """Same-seed traces of every production-shaped generator are pinned
+    byte-for-byte — any change to a handler's rng draw order (or to the
+    shared-stream iteration order in ``gen_arrivals``) is an explicit,
+    visible decision, exactly like the built-in processes' digests in
+    test_dataplane_sim.py."""
+    pats = _generator_patterns()
+    assert _digest(*make_trace(pats, n_ticks=_TICKS, seed=0)) == (
+        (7, 1234),
+        "33ac781cceab741f6556bb9abf959eae1e31d1569ef644ffacc6c2b79b39f2fd")
+    assert _digest(*make_trace(pats, n_ticks=_TICKS, seed=7)) == (
+        (7, 1208),
+        "8dee228bcdd48e4da05bf65add80d9a7b9b1923cbf36aa8066d58550248fd4a6")
+
+
+# ---------------------------------------------------------------------------
+# Generator sanity properties
+# ---------------------------------------------------------------------------
+
+
+def _valid_times_s(t: np.ndarray, row: int = 0) -> np.ndarray:
+    v = t[row][t[row] < np.iinfo(np.int32).max]
+    return v / _CLOCK
+
+
+def test_mmpp_long_run_mean_rate():
+    pat = TrafficPattern(1024, load=0.3, process="mmpp",
+                         params=(("states", (0.25, 2.5)),
+                                 ("sojourn_s", _HORIZON_S / 10)))
+    t, _s = make_trace(pat, n_ticks=_TICKS, seed=1)
+    want = pat.rate_msgs_per_sec(32.0) * _HORIZON_S
+    got = _valid_times_s(t).size
+    assert 0.6 * want < got < 1.6 * want, (got, want)
+
+
+def test_heavytail_sizes_mean_and_cap():
+    cap = 64 * 1024
+    for dist, knob in (("pareto", ("alpha", 1.5)),
+                       ("lognormal", ("sigma", 1.0))):
+        pat = TrafficPattern(1024, load=0.3, process="heavytail",
+                             params=(("dist", dist), knob,
+                                     ("max_bytes", cap)))
+        t, s = make_trace(pat, n_ticks=_TICKS, seed=2)
+        sz = s[0][t[0] < np.iinfo(np.int32).max]
+        assert sz.max() <= cap
+        assert sz.min() >= 1
+        assert abs(sz.mean() - 1024) / 1024 < 0.25, (dist, sz.mean())
+
+
+def test_heavytail_alpha_at_most_one_rejected():
+    pat = TrafficPattern(1024, load=0.3, process="heavytail",
+                         params=(("alpha", 1.0),))
+    with pytest.raises(ValueError, match="alpha > 1"):
+        make_trace(pat, n_ticks=2_000)
+
+
+def test_diurnal_rate_swings_with_the_curve():
+    pat = TrafficPattern(1024, load=0.3, process="diurnal",
+                         params=(("amp", 0.9),))
+    t, _s = make_trace(pat, n_ticks=_TICKS, seed=3)
+    v = _valid_times_s(t)
+    first = (v < _HORIZON_S / 2).sum()
+    second = (v >= _HORIZON_S / 2).sum()
+    # phase 0, one period over the horizon: day (sin > 0) then night
+    assert first > 2 * second, (first, second)
+
+
+def test_corrburst_epochs_shared_across_seeds():
+    """Burst epochs come from the group id, not the trace seed: with the
+    nominal rate fully consumed by bursts (base Poisson rate 0), two
+    trace seeds produce the SAME trace — which is what keeps tenants on
+    different servers (different seeds) bursting in lockstep."""
+    hz, blen = 50_000.0, 8
+    pat = TrafficPattern(1024, rate_mps=hz * blen, process="corrburst",
+                         params=(("group", 11), ("burst_hz", hz),
+                                 ("burst_len", blen)))
+    t1, s1 = make_trace(pat, n_ticks=_TICKS, seed=4)
+    t2, s2 = make_trace(pat, n_ticks=_TICKS, seed=5)
+    assert np.array_equal(t1, t2) and np.array_equal(s1, s2)
+
+
+def test_flash_storm_multiplies_rate():
+    pat = TrafficPattern(1024, load=0.3, process="flash",
+                         params=(("at", 0.5), ("mult", 8.0)))
+    t, _s = make_trace(pat, n_ticks=_TICKS, seed=6)
+    v = _valid_times_s(t)
+    pre = ((v >= 0.2 * _HORIZON_S) & (v < 0.5 * _HORIZON_S)).sum()
+    storm = ((v >= 0.5 * _HORIZON_S) & (v < 0.8 * _HORIZON_S)).sum()
+    assert storm > 3 * pre, (pre, storm)
+
+
+def test_adversarial_bursts_are_deterministic_and_phase_locked():
+    bucket, period, msg = 32 * 1024, 96e-6, 1024
+    nmsg = bucket // msg
+    pat = TrafficPattern(msg, rate_mps=nmsg / period, process="adversarial",
+                         params=(("bucket_bytes", bucket),
+                                 ("period_s", period)))
+    t1, _ = make_trace(pat, n_ticks=_TICKS, seed=8)
+    t2, _ = make_trace(pat, n_ticks=_TICKS, seed=9)
+    assert np.array_equal(t1, t2), "adversarial trace must not draw rng"
+    v = _valid_times_s(t1)
+    n_bursts = int(_HORIZON_S / period) + 1
+    assert v.size == n_bursts * nmsg, (v.size, n_bursts, nmsg)
+    # burst k opens exactly at the k-th period edge
+    starts = v[::nmsg]
+    assert np.allclose(starts, period * np.arange(n_bursts), atol=1e-8)
+
+
+def test_trace_budget_covers_bursty_peaks():
+    """Registered budget factors reserve enough trace columns that a
+    peaked process is not silently truncated (the [N, M] trace matrix is
+    sized per flow by ``sim.trace_budget``)."""
+    hz, blen = 50_000.0, 8
+    pat = TrafficPattern(1024, rate_mps=1e5, process="corrburst",
+                         params=(("burst_hz", hz), ("burst_len", blen)))
+    rate = pat.rate_msgs_per_sec(32.0)
+    m = sim.trace_budget(pat, rate, _HORIZON_S)
+    assert m >= hz * blen * _HORIZON_S, m     # bursts alone exceed rate*T
+    cbr = TrafficPattern(1024, rate_mps=1e5, process="cbr")
+    assert sim.trace_budget(cbr, rate, _HORIZON_S) == \
+        int(np.ceil(rate * _HORIZON_S)) + 16
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry + build determinism + replay round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry():
+    names = wl.scenario_names()
+    for want in ("mmpp_surge", "heavy_tail", "diurnal_corr",
+                 "flash_crowd", "adversarial_probe"):
+        assert want in names, names
+    with pytest.raises(KeyError, match="mmpp_surge"):  # lists registry
+        wl.get_scenario("no_such_scenario")
+    spec = wl.get_scenario("mmpp_surge")
+    with pytest.raises(ValueError, match="already registered"):
+        wl.register_scenario(spec)
+    wl.register_scenario(spec, replace=True)
+
+
+#: shrunken flash_crowd (events included) for the expensive run tests
+def _small_scenario():
+    spec = wl.get_scenario("flash_crowd")
+    return dataclasses.replace(spec, window_ticks=1_000, n_windows=4)
+
+
+def test_scenario_build_is_bitwise_deterministic(profile):
+    spec = _small_scenario()
+    b1 = spec.build(profile=profile)
+    b2 = spec.build(profile=profile)
+    assert b1.lane_maps == b2.lane_maps
+    assert b1.run_kwargs["seeds"] == b2.run_kwargs["seeds"]
+    for (t1, s1), (t2, s2) in zip(b1.arrivals, b2.arrivals):
+        assert np.array_equal(t1, t2)
+        assert np.array_equal(s1, s2)
+
+
+def test_trace_roundtrip_json_and_npz(tmp_path, profile):
+    spec = _small_scenario()
+    built = spec.build(profile=profile)
+    meta = {"scenario": spec.name, "seed": spec.seed}
+    for ext in (".json", ".npz"):
+        p = tmp_path / f"trace{ext}"
+        wl.save_trace(p, built.arrivals, meta=meta)
+        arr, got_meta = wl.load_trace(p)
+        assert got_meta == meta
+        for (t1, s1), (t2, s2) in zip(built.arrivals, arr):
+            assert t2.dtype == np.int32 and s2.dtype == np.int32
+            assert np.array_equal(t1, t2), ext
+            assert np.array_equal(s1, s2), ext
+    with pytest.raises(ValueError, match="json or .npz"):
+        wl.save_trace(tmp_path / "trace.txt", built.arrivals)
+
+
+def test_replayed_trace_reproduces_counters(tmp_path, profile):
+    """The acceptance contract for replayable runs: save a built
+    scenario's trace, load it back, run both — identical counters,
+    churn events included (their mid-run traces regenerate from the
+    same per-event seeds)."""
+    spec = _small_scenario()
+    b1 = spec.build(profile=profile)
+    wl.save_trace(tmp_path / "t.npz", b1.arrivals,
+                  meta={"scenario": spec.name})
+    arr, _meta = wl.load_trace(tmp_path / "t.npz")
+    b2 = spec.build(profile=profile, arrivals=arr)
+    r1, rep1 = b1.run()
+    r2, rep2 = b2.run()
+    for a, b in zip(r1, r2):
+        for k in a.counters:
+            assert np.array_equal(np.asarray(a.counters[k]),
+                                  np.asarray(b.counters[k])), k
+    # and the windowed telemetry agrees too
+    for rb1, rb2 in zip(rep1, rep2):
+        for w1, w2 in zip(rb1, rb2):
+            assert w1.measured == w2.measured
